@@ -1,0 +1,107 @@
+"""Fig. 2(b): jagged fusion operators vs padded-dense baseline.
+
+Paper claim (FuXi-long, 8k): latency 961→431 ms (2.2×), reserved memory
+47.8→14.3 GB (70%). We reproduce the *ratios* on CPU-scaled shapes:
+  baseline  = dense padded attention + RAB over (B, L, ·) with padding
+  optimized = packed jagged attention (XLA blocked path; the Pallas kernel
+              is the TPU backend, validated separately in tests)
+Memory is compared analytically: live attention-input bytes padded vs
+packed (the padding share is the paper's redundancy).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, jagged_inputs, longtail_lengths, time_fn
+from repro.configs.base import RABConfig
+from repro.models.hstu import (init_rab, jagged_pointwise_attention_blocked,
+                               rab_bias)
+
+
+def dense_padded_attention(q, k, v, lens, rab_params, rab):
+    """Baseline: (B, L, H, D) padded attention + RAB, full materialization."""
+    B, L, H, D = q.shape
+    scale = 1.0 / np.sqrt(D)
+    pos = jnp.arange(L, dtype=jnp.int32)
+    ts = jnp.cumsum(jnp.ones((B, L), jnp.int32), 1)
+    s = jnp.einsum("blhd,bmhd->blmh", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    bias = rab_bias(rab_params, rab, pos, pos, ts[0], ts[0])
+    s = s + bias[None]
+    a = s * jax.nn.sigmoid(s)
+    mask = (pos[:, None] >= pos[None, :])[None]
+    mask = mask & (pos[None, :, None] < lens[:, None, None]) \
+                & (pos[None, None, :] < lens[:, None, None])
+    a = jnp.where(mask[..., None], a, 0.0) / jnp.maximum(
+        lens[:, None, None, None], 1)
+    return jnp.einsum("blmh,bmhd->blhd", a.astype(v.dtype), v)
+
+
+def main():
+    rab = RABConfig(num_pos_buckets=128, num_time_buckets=32)
+    B, L, H, D = 8, 512, 4, 64
+    lens = longtail_lengths(B, mean=L * 0.45, max_len=L, seed=0)
+    key = jax.random.PRNGKey(0)
+
+    # --- baseline: padded dense ------------------------------------------
+    kd = jax.random.split(key, 3)
+    qd = jax.random.normal(kd[0], (B, L, H, D), jnp.float32)
+    kdn = jax.random.normal(kd[1], (B, L, H, D), jnp.float32)
+    vd = jax.random.normal(kd[2], (B, L, H, D), jnp.float32)
+    rp = init_rab(key, rab, H)
+    lens_j = jnp.asarray(lens, jnp.int32)
+    f_base = jax.jit(lambda q, k, v: dense_padded_attention(
+        q, k, v, lens_j, rp, rab))
+    t_base = time_fn(f_base, qd, kdn, vd)
+
+    # --- optimized: packed jagged ----------------------------------------
+    cap = int(np.sum(lens))
+    cap += (-cap) % 128
+    q, k2, v, offsets, ts = jagged_inputs(key, lens, H, D, cap)
+    f_jag = jax.jit(lambda q, k, v: jagged_pointwise_attention_blocked(
+        q, k, v, offsets, ts, rp, rab, block=128))
+    t_jag = time_fn(f_jag, q, k2, v)
+
+    # --- memory: live attention-input bytes ------------------------------
+    bytes_padded = 3 * B * L * H * D * 4 + B * L * L * H * 4
+    bytes_packed = 3 * cap * H * D * 4 + cap * 128 * H * 4  # blocked scores
+
+    # --- the TPU kernel's block skipping (§4.1.1): fraction of (qb, kb)
+    # block pairs that are live (same-row ∩ causal) — the XLA path computes
+    # all of them; the Pallas kernel skips dead ones via the SMEM seg test.
+    import numpy as _np
+    block = 128
+    nb = cap // block
+    seg = _np.full(cap, -1, _np.int64)
+    cur = 0
+    for i, n in enumerate(lens):
+        seg[cur:cur + n] = i
+        cur += n
+    live = 0
+    for qi in range(nb):
+        for ki in range(qi + 1):          # causal
+            qs = seg[qi * block:(qi + 1) * block]
+            ks = seg[ki * block:(ki + 1) * block]
+            qv, kv = qs[qs >= 0], ks[ks >= 0]
+            if len(qv) and len(kv) and qv.min() <= kv.max() \
+                    and kv.min() <= qv.max():
+                live += 1
+    total_blocks = nb * nb
+    padded_blocks = B * (L // block) ** 2 / 2  # causal half of padded work
+    kernel_flop_ratio = padded_blocks / max(live, 1)
+
+    emit("fig2_jagged_fusion.baseline_padded", t_base,
+         f"mem_bytes={bytes_padded}")
+    emit("fig2_jagged_fusion.jagged_packed", t_jag,
+         f"mem_bytes={bytes_packed}")
+    emit("fig2_jagged_fusion.speedup", 0.0,
+         f"xla_latency_ratio={t_base / t_jag:.2f}x; kernel block-skip: "
+         f"{live}/{total_blocks} blocks live -> structural speedup "
+         f"{kernel_flop_ratio:.1f}x vs padded (paper 2.2x); "
+         f"mem_reduction={1 - bytes_packed / bytes_padded:.0%} (paper 70%)")
+
+
+if __name__ == "__main__":
+    main()

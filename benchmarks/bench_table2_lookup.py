@@ -1,0 +1,55 @@
+"""Table 2: jagged embedding lookup — padded baseline vs valid-index-only.
+
+Paper: 1,064,960 total indices, 50.43% padded zeros; forward 18→3 ms (6×),
+backward 36→9 ms (4×). We reproduce the *ratio* by comparing a padded
+lookup (every slot gathered + zero-check masking) against the packed
+valid-index path at the paper's padding share.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+
+
+def main():
+    V, D = 100_000, 64
+    total = 262_144           # scaled-down index stream, same padding share
+    pad_share = 0.5043
+    n_valid = int(total * (1 - pad_share))
+    rng = np.random.default_rng(0)
+    table = jax.random.normal(jax.random.PRNGKey(0), (V, D), jnp.float32)
+
+    padded_ids = np.zeros(total, np.int32)       # 0 == padding sentinel
+    valid_pos = rng.choice(total, n_valid, replace=False)
+    padded_ids[valid_pos] = rng.integers(1, V, n_valid)
+    packed_ids = padded_ids[padded_ids > 0]
+
+    jp = jnp.asarray(padded_ids)
+    jk = jnp.asarray(packed_ids)
+
+    def fwd_padded(tbl):
+        emb = jnp.take(tbl, jp, axis=0)
+        return jnp.where((jp > 0)[:, None], emb, 0.0).sum()   # zero-check
+
+    def fwd_packed(tbl):
+        return jnp.take(tbl, jk, axis=0).sum()
+
+    t_fwd_base = time_fn(jax.jit(fwd_padded), table)
+    t_fwd_opt = time_fn(jax.jit(fwd_packed), table)
+    t_bwd_base = time_fn(jax.jit(jax.grad(fwd_padded)), table)
+    t_bwd_opt = time_fn(jax.jit(jax.grad(fwd_packed)), table)
+
+    emit("table2_lookup.fwd_baseline", t_fwd_base,
+         f"indices={total} padded={total - n_valid}")
+    emit("table2_lookup.fwd_jagged", t_fwd_opt,
+         f"speedup={t_fwd_base / t_fwd_opt:.1f}x (paper 6x)")
+    emit("table2_lookup.bwd_baseline", t_bwd_base, "")
+    emit("table2_lookup.bwd_jagged", t_bwd_opt,
+         f"speedup={t_bwd_base / t_bwd_opt:.1f}x (paper 4x)")
+
+
+if __name__ == "__main__":
+    main()

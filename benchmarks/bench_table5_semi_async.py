@@ -1,0 +1,76 @@
+"""Table 5: semi-async training — overlap + accuracy parity.
+
+Paper: unmasked sparse-comm time 459→29 ms (24.1%→2.2% of step) with
+HR/NDCG parity. Here: (a) schedule model of the unmasked fraction (the τ=1
+decoupling moves sparse comm off the critical path, bounded by dense
+compute), and (b) measured loss parity sync vs semi-async on the real
+GR trainer after N steps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import ARCHS, reduced
+from repro.models.model_zoo import get_bundle
+from repro.training.trainer import gr_train_state, make_gr_train_step
+
+
+def schedule_model():
+    """Critical-path model (per-step ms, paper's 2k-seq regime): sparse
+    comm 459 of 1904 total. Synchronous: serial. Semi-async: sparse comm of
+    batch i+1 overlaps dense compute of batch i; unmasked = max(0, comm −
+    dense window)."""
+    dense, sparse_comm, other = 1100.0, 459.0, 345.0
+    sync_step = dense + sparse_comm + other
+    overlap_window = dense
+    unmasked = max(0.0, sparse_comm - overlap_window)
+    async_step = dense + other + unmasked
+    return sync_step, async_step, unmasked
+
+
+def main():
+    sync_step, async_step, unmasked = schedule_model()
+    emit("table5_semi_async.schedule", 0.0,
+         f"sync_step={sync_step:.0f}ms async_step={async_step:.0f}ms "
+         f"unmasked={unmasked:.0f}ms ({100 * unmasked / async_step:.1f}% "
+         f"vs paper 2.2%)")
+
+    # accuracy parity on the real trainer
+    cfg = reduced(ARCHS["hstu-tiny"]).replace(num_negatives=8,
+                                              vocab_size=512)
+    b = get_bundle(cfg)
+    key = jax.random.PRNGKey(0)
+
+    def batch(i):
+        k = jax.random.PRNGKey(i)
+        G, cap = 2, 128
+        return {
+            "ids": jax.random.randint(k, (G, cap), 0, 512),
+            "labels": jax.random.randint(k, (G, cap), 1, 512),
+            "timestamps": jnp.cumsum(
+                jax.random.randint(k, (G, cap), 0, 60), 1).astype(jnp.int32),
+            "offsets": jnp.asarray([[0, 64, 128], [0, 100, 120]], jnp.int32),
+            "neg_ids": jax.random.randint(k, (G, cap, 8), 0, 512),
+            "rng": jnp.zeros((2,), jnp.uint32),
+        }
+
+    losses = {}
+    for mode in (False, True):
+        state = gr_train_state(b.init_dense(key), b.init_table(key))
+        step = jax.jit(make_gr_train_step(
+            lambda d, t, bt: b.loss(d, t, bt, neg_mode="segmented",
+                                    neg_segment=32), semi_async=mode))
+        for i in range(12):
+            state, m = step(state, batch(i % 3))
+        losses[mode] = float(m["loss"])
+    gap = abs(losses[True] - losses[False]) / losses[False]
+    emit("table5_semi_async.accuracy_parity", 0.0,
+         f"sync_loss={losses[False]:.4f} semi_async_loss={losses[True]:.4f} "
+         f"gap={100 * gap:.2f}% (paper: HR parity, max 0.26% delta)")
+
+
+if __name__ == "__main__":
+    main()

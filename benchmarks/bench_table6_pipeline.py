@@ -1,0 +1,51 @@
+"""Table 6: fine-grained pipeline orchestration — NPU-busy breakdown.
+
+Paper (FuXi-large/long): computing 94.3% of wall, not-overlapped comm
+≤5.6%, free ≤0.33%. We drive the 6-stage executor (Algorithm 1) with
+stage durations proportional to the paper's FuXi-large profile and report
+the same breakdown, plus a no-pipeline (serial) reference.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core.pipeline import (PipelineHooks, SixStagePipeline,
+                                 timeline_report)
+
+# stage costs (s), scaled 1:100 from FuXi-large: dense 656ms, comm 327ms,
+# host dataload/unique within the dense window
+DUR = {"dataload": 0.0030, "a2a": 0.0033, "unique": 0.0020,
+       "emb_fwd": 0.0008, "dense_fwd": 0.0022, "dense_bwd": 0.0036,
+       "emb_bwd": 0.0010}
+
+
+def mk(name):
+    def fn(i, *a):
+        time.sleep(DUR[name])
+        return (name, i)
+    return fn
+
+
+def main():
+    hooks = PipelineHooks(**{s: mk(s) for s in DUR})
+    p = SixStagePipeline(hooks, workers=3)
+    n = 40
+    t0 = time.perf_counter()
+    p.run(n)
+    wall = time.perf_counter() - t0
+    r = timeline_report(p.events)
+    serial = n * sum(DUR.values())
+    emit("table6_pipeline.computing_ratio", wall / n * 1e6,
+         f"{100 * r['computing_ratio']:.1f}% (paper 94.3%)")
+    emit("table6_pipeline.comm_not_overlapped", 0.0,
+         f"{100 * r['comm_not_overlapped_ratio']:.1f}% (paper <=5.6%)")
+    emit("table6_pipeline.free", 0.0,
+         f"{100 * r['free_ratio']:.2f}% (paper <=0.33%)")
+    emit("table6_pipeline.vs_serial", 0.0,
+         f"pipeline={wall:.3f}s serial={serial:.3f}s "
+         f"speedup={serial / wall:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

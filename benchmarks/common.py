@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: timing, CSV emission, synthetic jagged data."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time (µs) of a jitted callable (blocks on result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def longtail_lengths(n: int, mean: float = 300.0, sigma: float = 1.1,
+                     max_len: int = 2048, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    mu = np.log(mean) - sigma ** 2 / 2
+    return np.clip(rng.lognormal(mu, sigma, n).astype(np.int64), 1, max_len)
+
+
+def jagged_inputs(key, lens, H, D, cap=None):
+    cap = cap or int(np.sum(lens))
+    cap = max(cap, int(np.sum(lens)))
+    ks = jax.random.split(key, 4)
+    offsets = jnp.asarray(np.concatenate([[0], np.cumsum(lens)]), jnp.int32)
+    q = jax.random.normal(ks[0], (cap, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (cap, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (cap, H, D), jnp.float32)
+    ts = jnp.cumsum(jax.random.randint(ks[3], (cap,), 1, 600)).astype(jnp.int32)
+    return q, k, v, offsets, ts

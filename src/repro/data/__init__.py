@@ -1,0 +1,4 @@
+from repro.data.synthetic import SyntheticKuaiRand
+from repro.data.kuairand import (five_core_filter, leave_one_out,
+                                 preprocess_log)
+from repro.data.loader import GRLoader

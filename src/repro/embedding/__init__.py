@@ -1,0 +1,2 @@
+from repro.embedding.tables import (TableSpec, init_table, lookup,
+                                    lookup_quantized, multi_table_lookup)

@@ -1,0 +1,67 @@
+"""Sparse embedding tables — the GR system's sparse substrate.
+
+The master table is fp32 (AdaGrad-friendly); lookups return the compute
+dtype. ``lookup_quantized`` is the paper's §4.3.2 FP16 path: rows are
+*stored/fetched* in half precision for negative samples while the rest of
+the pipeline is unchanged.
+
+Multi-table (KJT-style) batches: a dict of feature name → jagged ids; the
+table-major reorganization of §4.1.2 (group all data per table, then spread
+each table across cores) corresponds here to looking tables up one at a
+time over their packed valid indices only — no padded zeros enter the
+gather. The TPU hot-path kernel is ``repro.kernels.jagged_lookup``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jagged import JaggedBatch
+
+
+@dataclass(frozen=True)
+class TableSpec:
+    name: str
+    vocab: int
+    dim: int
+    init_scale: float = 0.02
+
+
+def init_table(key, spec: TableSpec, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (spec.vocab, spec.dim), jnp.float32)
+            * spec.init_scale).astype(dtype)
+
+
+def lookup(table: jax.Array, ids: jax.Array,
+           dtype=jnp.bfloat16) -> jax.Array:
+    """Plain (dense-grad) lookup; GSPMD turns this into the vocab-parallel
+    masked-gather+psum when `table` is sharded on dim 0."""
+    return jnp.take(table, ids, axis=0).astype(dtype)
+
+
+def lookup_quantized(table: jax.Array, ids: jax.Array,
+                     qdtype=jnp.float16) -> jax.Array:
+    """§4.3.2: fetch rows in half precision (fp16 paper-faithful; bf16 is
+    the TPU-native variant). Quantization happens at the *fetch*, so the
+    live negative tensor is half the bytes."""
+    return jnp.take(table.astype(qdtype), ids, axis=0)
+
+
+def multi_table_lookup(tables: Dict[str, jax.Array],
+                       feats: Dict[str, JaggedBatch],
+                       dtype=jnp.bfloat16) -> Dict[str, JaggedBatch]:
+    """KJT-style lookup: per-table packed gather over valid indices only.
+
+    Invalid (padding) slots contribute a zero row — matching the paper's
+    'operate only on valid indices' semantics (§4.1.2 step 1).
+    """
+    out: Dict[str, JaggedBatch] = {}
+    for name, jb in feats.items():
+        t = tables[name]
+        emb = jnp.take(t, jb.values, axis=0).astype(dtype)
+        emb = emb * jb.valid_mask()[:, None].astype(dtype)
+        out[name] = JaggedBatch(values=emb, offsets=jb.offsets)
+    return out

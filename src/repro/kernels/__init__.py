@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the paper's compute hot-spots (validated in
+# interpret mode on CPU against each ref.py oracle):
+#   jagged_attention/ - fused jagged pointwise attention + RAB (4.1.1)
+#   jagged_lookup/    - scalar-prefetch embedding gather + run-sum bwd (4.1.2)
+#   neg_logits/       - segmented negative-sampling logits (4.3.1-4.3.2)

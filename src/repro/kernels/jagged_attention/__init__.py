@@ -1,0 +1,2 @@
+from repro.kernels.jagged_attention.ops import jagged_attention, make_attn_fn
+from repro.kernels.jagged_attention.ref import jagged_attention_ref

@@ -1,0 +1,137 @@
+"""jit'd wrapper for the fused jagged attention+RAB kernel.
+
+Public entry :func:`jagged_attention` is drop-in compatible with the model's
+``attn_fn`` signature (models/hstu.py), computes the per-token jagged
+metadata + per-block segment ranges, pads the capacity to the block size,
+and differentiates through a custom VJP backed by the two backward kernels.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RABConfig
+from repro.kernels.jagged_attention import kernel as K
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _token_meta(cap: int, offsets: jax.Array, timestamps: jax.Array):
+    """(meta_i32 (cap,3): seg/pos/ts, meta_f32 (cap,1): 1/n_row)."""
+    slot = jnp.arange(cap, dtype=jnp.int32)
+    total = offsets[-1]
+    seg = jnp.searchsorted(offsets, slot, side="right").astype(jnp.int32) - 1
+    valid = slot < total
+    segc = jnp.clip(seg, 0, offsets.shape[0] - 2)
+    pos = slot - offsets[segc]
+    lengths = offsets[1:] - offsets[:-1]
+    n = jnp.maximum(lengths[segc], 1).astype(jnp.float32)
+    seg = jnp.where(valid, seg, K.NEG_SEG)
+    pos = jnp.where(valid, pos, 0)
+    ninv = jnp.where(valid, 1.0 / n, 0.0)
+    ts = timestamps.astype(jnp.int32)
+    meta_i32 = jnp.stack([seg, pos, ts], axis=1)
+    meta_f32 = ninv[:, None]
+    return meta_i32, meta_f32
+
+
+def _seg_ranges(seg: jax.Array, nb: int, block: int) -> jax.Array:
+    """Per-block (min valid seg, max seg) for the SMEM skip test."""
+    s = seg.reshape(nb, block)
+    big = jnp.int32(2 ** 30)
+    lo = jnp.min(jnp.where(s >= 0, s, big), axis=1)
+    hi = jnp.max(s, axis=1)
+    lo = jnp.where(hi >= 0, lo, big)
+    return jnp.stack([lo, hi], axis=1).astype(jnp.int32)
+
+
+def jagged_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     offsets: jax.Array, timestamps: jax.Array,
+                     rab_params, rab: Optional[RABConfig],
+                     *, time_mode: str = "bucket", causal: bool = True,
+                     block: int = 128,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """Fused jagged pointwise attention + RAB. q,k,v: (cap, H, D).
+
+    time_mode="bucket" uses the HSTU bucketized time table; "functional"
+    uses FuXi-γ's exponential-power encoder computed elementwise in-kernel
+    (amp/σ/ρ packed as a (3, H) table; the raw-parameter transforms stay
+    in traced code outside the custom_vjp so their chain rule composes).
+    """
+    if time_mode not in ("bucket", "functional"):
+        raise NotImplementedError(time_mode)
+    interpret = default_interpret() if interpret is None else interpret
+    cap, H, D = q.shape
+    assert v.shape == q.shape == k.shape, (q.shape, k.shape, v.shape)
+    scale = 1.0 / math.sqrt(D)
+
+    functional = time_mode == "functional"
+    use_pos = bool(rab and rab.use_pos and "pos_table" in rab_params)
+    if functional:
+        use_time = bool(rab and rab.use_time and "time_amp" in rab_params)
+    else:
+        use_time = bool(rab and rab.use_time and "time_table" in rab_params)
+    pt = (rab_params["pos_table"].astype(jnp.float32) if use_pos
+          else jnp.zeros((8, H), jnp.float32))
+    if functional and use_time:
+        sigma = jnp.exp(rab_params["time_log_sigma"].astype(jnp.float32))
+        rho = (jax.nn.sigmoid(rab_params["time_rho"].astype(jnp.float32))
+               * 1.5 + 0.25)
+        tt = jnp.stack([rab_params["time_amp"].astype(jnp.float32),
+                        sigma, rho], axis=0)              # (3, H)
+    elif use_time:
+        tt = rab_params["time_table"].astype(jnp.float32)
+    else:
+        tt = jnp.zeros((8, H), jnp.float32)
+    tb_scale = rab.time_bucket_scale if rab else 0.301
+
+    # pad capacity to a block multiple
+    pad = (-cap) % block
+    if pad:
+        zpad = jnp.zeros((pad, H, D), q.dtype)
+        q, k, v = (jnp.concatenate([t, zpad], 0) for t in (q, k, v))
+        timestamps = jnp.concatenate(
+            [timestamps, jnp.zeros((pad,), timestamps.dtype)])
+    capp = cap + pad
+    meta_i32, meta_f32 = _token_meta(capp, offsets, timestamps)
+    seg_rng = _seg_ranges(meta_i32[:, 0], capp // block, block)
+
+    kw = dict(block=block, scale=scale, tb_scale=tb_scale,
+              use_pos=use_pos, use_time=use_time, causal=causal,
+              time_functional=functional, interpret=interpret)
+
+    @jax.custom_vjp
+    def _attn(q, k, v, pt, tt):
+        return K.fwd_pallas(q, k, v, pt, tt, meta_i32, meta_f32,
+                            seg_rng, **kw)
+
+    def _fwd(q, k, v, pt, tt):
+        return _attn(q, k, v, pt, tt), (q, k, v, pt, tt)
+
+    def _bwd(res, dy):
+        q, k, v, pt, tt = res
+        dq, dk, dv, dpt, dtt = K.bwd_pallas(
+            q, k, v, dy, pt, tt, meta_i32, meta_f32, seg_rng, **kw)
+        if not use_pos:
+            dpt = jnp.zeros_like(pt)
+        if not use_time:
+            dtt = jnp.zeros_like(tt)
+        return dq, dk, dv, dpt, dtt
+
+    _attn.defvjp(_fwd, _bwd)
+    out = _attn(q, k, v, pt, tt)
+    if pad:
+        out = out[:cap]
+    return out
+
+
+def make_attn_fn(*, block: int = 128, interpret: Optional[bool] = None):
+    """attn_fn factory for models.hstu.hstu_block(attn_fn=...)."""
+    return functools.partial(jagged_attention, block=block,
+                             interpret=interpret)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the jagged attention + RAB kernel.
+
+This is the same math as models/hstu.jagged_pointwise_attention (the model's
+oracle path) re-exported under the kernels convention; tests sweep shapes
+and dtypes asserting kernel ≈ ref.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.configs.base import RABConfig
+from repro.models.hstu import jagged_pointwise_attention
+
+
+def jagged_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         offsets: jax.Array, timestamps: jax.Array,
+                         rab_params, rab: Optional[RABConfig],
+                         *, time_mode: str = "bucket",
+                         causal: bool = True) -> jax.Array:
+    return jagged_pointwise_attention(q, k, v, offsets, timestamps,
+                                      rab_params, rab,
+                                      time_mode=time_mode, causal=causal)

@@ -1,0 +1,4 @@
+from repro.kernels.jagged_lookup.ops import (jagged_lookup,
+                                             multi_table_lookup,
+                                             scatter_add_rows)
+from repro.kernels.jagged_lookup.ref import jagged_lookup_ref, scatter_add_ref

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: jagged embedding lookup (paper §4.1.2).
+
+Forward — scalar-prefetch gather: the packed *valid* indices are prefetched
+into SMEM and drive the BlockSpec ``index_map`` directly, so each grid step
+DMAs exactly one live embedding row HBM→VMEM. Padding never enters the
+kernel (the paper's 'operate only on valid indices'); there is no per-row
+zero-check or branch (the paper's KJT complaint) because validity is
+resolved before launch.
+
+Backward — sorted scatter-add: indices are sorted in the ops wrapper (the
+paper's table-major batch regrouping, which also gives the L2-locality
+win), so duplicate rows occupy *consecutive* grid steps; the output block
+for a row therefore stays VMEM-resident across its duplicates and the
+kernel accumulates in place, writing each row exactly once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# --------------------------------------------------------------------------
+# forward gather
+# --------------------------------------------------------------------------
+
+def _gather_kernel(ids_ref, tbl_ref, out_ref, *, rows_per_step):
+    out_ref[...] = tbl_ref[...]
+
+
+def gather_pallas(table: jax.Array, ids: jax.Array, *,
+                  interpret: bool = False) -> jax.Array:
+    """table (V, D), ids (n,) int32 (pre-clipped to [0, V)) → (n, D)."""
+    n = ids.shape[0]
+    V, D = table.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, D), lambda i, ids_ref: (ids_ref[i], 0))],
+        out_specs=pl.BlockSpec((1, D), lambda i, ids_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, rows_per_step=1),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, D), table.dtype),
+        interpret=interpret,
+    )(ids, table)
+
+
+# --------------------------------------------------------------------------
+# backward run-sum (ids must be sorted ascending — table-major regrouping)
+# --------------------------------------------------------------------------
+
+def _runsum_kernel(ids_ref, grows_ref, out_ref, acc_ref):
+    """Running sum within each run of equal sorted ids.
+
+    out[i] = Σ grad_rows[j..i] for the run containing i — the run TOTAL
+    lands on the run's last element; the ops wrapper scatters exactly those
+    (unique destinations, so the final XLA scatter is conflict-free).
+    The accumulator lives in VMEM scratch and persists across the
+    (sequential) grid, exploiting the same consecutive-duplicates locality
+    the paper's table-level regrouping creates on Ascend L2.
+    """
+    i = pl.program_id(0)
+    first = (i == 0) | (ids_ref[i] != ids_ref[jnp.maximum(i - 1, 0)])
+    row = grows_ref[...].astype(jnp.float32)
+
+    @pl.when(first)
+    def _set():
+        acc_ref[...] = row
+
+    @pl.when(jnp.logical_not(first))
+    def _add():
+        acc_ref[...] += row
+
+    out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def runsum_pallas(grad_rows: jax.Array, sorted_ids: jax.Array, *,
+                  interpret: bool = False) -> jax.Array:
+    """grad_rows (n, D) + sorted ids (n,) → per-run running sums (n, D)."""
+    n, D = grad_rows.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, D), lambda i, ids_ref: (i, 0))],
+        out_specs=pl.BlockSpec((1, D), lambda i, ids_ref: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((1, D), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _runsum_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, D), jnp.float32),
+        interpret=interpret,
+    )(sorted_ids, grad_rows)

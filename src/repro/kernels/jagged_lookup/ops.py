@@ -1,0 +1,95 @@
+"""jit'd wrappers for the jagged lookup kernel (paper §4.1.2).
+
+``jagged_lookup`` is a differentiable embedding gather over *packed valid
+indices*: forward is the scalar-prefetch Pallas gather; backward sorts the
+(id, grad-row) pairs — the table-major regrouping — feeds them through the
+run-sum kernel, and scatter-adds the per-run totals (unique destinations).
+
+``multi_table_lookup`` concatenates per-table id streams table-major into
+one fused kernel launch over a stacked table — the §4.1.2 'group all data
+per table across the batch' strategy, which makes consecutive grid steps
+hit the same table region.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.jagged_lookup import kernel as K
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def scatter_add_rows(grad_rows: jax.Array, ids: jax.Array, vocab: int, *,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """Σ grad_rows per id → dense (V, D). ids < 0 are dropped."""
+    interpret = default_interpret() if interpret is None else interpret
+    n, D = grad_rows.shape
+    valid = ids >= 0
+    skey = jnp.where(valid, ids, jnp.int32(2 ** 30))
+    order = jnp.argsort(skey)
+    sids = skey[order]
+    srows = grad_rows[order] * valid[order][:, None].astype(grad_rows.dtype)
+    sums = K.runsum_pallas(srows, sids, interpret=interpret)
+    is_end = jnp.concatenate([sids[:-1] != sids[1:],
+                              jnp.ones((1,), bool)])
+    dest = jnp.where(is_end & (sids < vocab), sids, vocab)
+    out = jnp.zeros((vocab, D), jnp.float32)
+    out = out.at[dest].add(jnp.where(is_end[:, None], sums, 0.0),
+                           mode="drop")
+    return out
+
+
+def jagged_lookup(table: jax.Array, ids: jax.Array, *,
+                  compute_dtype=jnp.bfloat16,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """Differentiable packed-index gather. ids (n,) int32, ids < 0 → zeros."""
+    interpret_ = default_interpret() if interpret is None else interpret
+    V, D = table.shape
+
+    @jax.custom_vjp
+    def _lookup(table):
+        valid = ids >= 0
+        safe = jnp.clip(ids, 0, V - 1)
+        rows = K.gather_pallas(table, safe, interpret=interpret_)
+        return (rows * valid[:, None].astype(table.dtype)).astype(compute_dtype)
+
+    def fwd(table):
+        return _lookup(table), None
+
+    def bwd(_, g):
+        return (scatter_add_rows(g.astype(jnp.float32), ids, V,
+                                 interpret=interpret_).astype(table.dtype),)
+
+    _lookup.defvjp(fwd, bwd)
+    return _lookup(table)
+
+
+def multi_table_lookup(tables: Sequence[jax.Array],
+                       ids_per_table: Sequence[jax.Array], *,
+                       compute_dtype=jnp.bfloat16,
+                       interpret: Optional[bool] = None
+                       ) -> Tuple[jax.Array, ...]:
+    """Fused table-major lookup: one kernel launch over stacked tables.
+
+    All tables must share D. ids are offset into the stacked row space and
+    concatenated table-major (all of table 0's ids, then table 1's, ...),
+    matching Fig. 3's batch restructuring.
+    """
+    D = tables[0].shape[1]
+    assert all(t.shape[1] == D for t in tables)
+    offs = [0]
+    for t in tables:
+        offs.append(offs[-1] + t.shape[0])
+    stacked = jnp.concatenate(tables, axis=0)
+    shifted = [jnp.where(i >= 0, i + off, -1)
+               for i, off in zip(ids_per_table, offs[:-1])]
+    flat = jnp.concatenate(shifted)
+    out = jagged_lookup(stacked, flat, compute_dtype=compute_dtype,
+                        interpret=interpret)
+    splits = jnp.cumsum(jnp.asarray([i.shape[0] for i in ids_per_table]))[:-1]
+    return tuple(jnp.split(out, splits))

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the jagged lookup kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def jagged_lookup_ref(table: jax.Array, ids: jax.Array,
+                      compute_dtype=jnp.bfloat16) -> jax.Array:
+    valid = ids >= 0
+    safe = jnp.clip(ids, 0, table.shape[0] - 1)
+    rows = jnp.take(table, safe, axis=0)
+    return (rows * valid[:, None].astype(table.dtype)).astype(compute_dtype)
+
+
+def scatter_add_ref(grad_rows: jax.Array, ids: jax.Array,
+                    vocab: int) -> jax.Array:
+    safe = jnp.where(ids >= 0, ids, vocab)
+    out = jnp.zeros((vocab, grad_rows.shape[1]), jnp.float32)
+    return out.at[safe].add(grad_rows.astype(jnp.float32), mode="drop")

@@ -1,0 +1,2 @@
+from repro.kernels.neg_logits.ops import neg_logits
+from repro.kernels.neg_logits.ref import neg_logits_ref

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: segmented negative-sampling logits (paper §4.3.1-2).
+
+The (T, R, D) negative-embedding tensor stays out of fast memory: the grid
+walks fixed-size segments of valid positions and Pallas's software pipeline
+double-buffers the HBM→VMEM segment copies (the paper's compute buffer +
+prefetch buffer), reducing the live footprint from (T, R, D) to
+2·(seg, R, D). Negatives may be stored fp16/bf16 (§4.3.2) — dequantization
+happens in VMEM right before the MXU dot.
+
+Backward is the same segmentation in reverse: d_out[t] = Σ_r g·n and
+d_neg[t,r] = g·out[t] per segment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fwd_kernel(o_ref, n_ref, out_ref, *, inv_tau):
+    o = o_ref[...].astype(jnp.float32)                   # (seg, D)
+    n = n_ref[...].astype(jnp.float32)                   # (seg, R, D)
+    out_ref[...] = (jnp.einsum("td,trd->tr", o, n,
+                               preferred_element_type=jnp.float32)
+                    * inv_tau).astype(out_ref.dtype)
+
+
+def fwd_pallas(out_emb: jax.Array, neg_emb: jax.Array, *, segment: int,
+               tau: float, interpret: bool = False) -> jax.Array:
+    T, R, D = neg_emb.shape
+    assert T % segment == 0, (T, segment)
+    grid = (T // segment,)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, inv_tau=1.0 / tau),
+        grid=grid,
+        in_specs=[pl.BlockSpec((segment, D), lambda i: (i, 0)),
+                  pl.BlockSpec((segment, R, D), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((segment, R), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, R), jnp.float32),
+        interpret=interpret,
+    )(out_emb, neg_emb)
+
+
+def _bwd_kernel(o_ref, n_ref, g_ref, do_ref, dn_ref, *, inv_tau):
+    o = o_ref[...].astype(jnp.float32)
+    n = n_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32) * inv_tau         # (seg, R)
+    do_ref[...] = jnp.einsum("tr,trd->td", g, n,
+                             preferred_element_type=jnp.float32
+                             ).astype(do_ref.dtype)
+    dn_ref[...] = (g[..., None] * o[:, None, :]).astype(dn_ref.dtype)
+
+
+def bwd_pallas(out_emb: jax.Array, neg_emb: jax.Array, g: jax.Array, *,
+               segment: int, tau: float, interpret: bool = False):
+    T, R, D = neg_emb.shape
+    grid = (T // segment,)
+    do, dn = pl.pallas_call(
+        functools.partial(_bwd_kernel, inv_tau=1.0 / tau),
+        grid=grid,
+        in_specs=[pl.BlockSpec((segment, D), lambda i: (i, 0)),
+                  pl.BlockSpec((segment, R, D), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((segment, R), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((segment, D), lambda i: (i, 0)),
+                   pl.BlockSpec((segment, R, D), lambda i: (i, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((T, D), jnp.float32),
+                   jax.ShapeDtypeStruct((T, R, D), neg_emb.dtype)],
+        interpret=interpret,
+    )(out_emb, neg_emb, g)
+    return do, dn

@@ -1,0 +1,50 @@
+"""jit'd wrapper for the segmented negative-logits kernel (§4.3.1-2)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.neg_logits import kernel as K
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def neg_logits(out_emb: jax.Array, neg_emb: jax.Array, *,
+               segment: int = 128, tau: float = 1.0,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """(T, D) × (T, R, D) → (T, R) logits, segment-pipelined.
+
+    ``neg_emb`` may be fp16/bf16 (the §4.3.2 quantized fetch path) — the
+    kernel dequantizes in VMEM. Differentiable via the segmented backward
+    kernel; dn is produced in neg_emb's (possibly half-precision) dtype.
+    """
+    interpret_ = default_interpret() if interpret is None else interpret
+    T = out_emb.shape[0]
+    pad = (-T) % segment
+    if pad:
+        out_emb = jnp.concatenate(
+            [out_emb, jnp.zeros((pad, *out_emb.shape[1:]), out_emb.dtype)])
+        neg_emb = jnp.concatenate(
+            [neg_emb, jnp.zeros((pad, *neg_emb.shape[1:]), neg_emb.dtype)])
+
+    @jax.custom_vjp
+    def _logits(o, n):
+        return K.fwd_pallas(o, n, segment=segment, tau=tau,
+                            interpret=interpret_)
+
+    def fwd(o, n):
+        return _logits(o, n), (o, n)
+
+    def bwd(res, g):
+        o, n = res
+        do, dn = K.bwd_pallas(o, n, g, segment=segment, tau=tau,
+                              interpret=interpret_)
+        return do.astype(o.dtype), dn
+
+    _logits.defvjp(fwd, bwd)
+    out = _logits(out_emb, neg_emb)
+    return out[:T] if pad else out

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the segmented negative-logits kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def neg_logits_ref(out_emb: jax.Array, neg_emb: jax.Array,
+                   tau: float = 1.0) -> jax.Array:
+    return jnp.einsum("td,trd->tr", out_emb.astype(jnp.float32),
+                      neg_emb.astype(jnp.float32)) / tau

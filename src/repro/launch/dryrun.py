@@ -1,0 +1,248 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (arch × shape × mesh) cell.
+
+For each cell this builds the production mesh, the partition plan, the
+train/prefill/decode step with full in_shardings, lowers against
+ShapeDtypeStruct inputs (no allocation), compiles, and records
+``memory_analysis()`` / ``cost_analysis()`` + the roofline terms parsed
+from the partitioned HLO.
+
+The two XLA_FLAGS lines above MUST stay the first statements — jax locks
+the device count at first init, and the 512 placeholder host devices are
+what lets ``make_production_mesh`` build the 16×16 / 2×16×16 grids.
+
+Usage:
+    python -m repro.launch.dryrun --arch glm4-9b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out results/
+"""
+import argparse
+import gzip
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_arch
+from repro.configs.shapes import SHAPES_BY_NAME, cells_for, shapes_for
+from repro.core.hsp import make_hsp_lookup
+from repro.core.sharding import shard_ctx
+from repro.launch import partition as PT
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+from repro.models.model_zoo import get_bundle
+from repro.training.trainer import (gr_train_state, lm_train_state,
+                                    make_gr_train_step, make_lm_train_step)
+
+
+def _sharded_bytes(sds_tree: Any, spec_tree: Any, mesh) -> int:
+    """Analytic per-device bytes of a sharded pytree."""
+    total = 0
+    flat_s, _ = jax.tree_util.tree_flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+    flat_t = jax.tree_util.tree_leaves(sds_tree)
+    for t, s in zip(flat_t, flat_s):
+        n = t.size * jnp.dtype(t.dtype).itemsize
+        denom = 1
+        for ax in (s or ()):  # each entry: None | str | tuple
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            for a in axes:
+                denom *= mesh.shape[a]
+        total += n // max(denom, 1)
+    return total
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Returns (jitted_fn, example_args (SDS), state_specs, plan, mesh)."""
+    cfg = get_arch(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = PT.make_plan(cfg, shape, mesh)
+    bundle = get_bundle(cfg)
+    key = jax.random.PRNGKey(0)
+
+    if cfg.gr:
+        if plan.neg_expansion > 1:
+            # §4.3.3: fetch R/k negatives, recover the full set by sharing
+            cfg = cfg.replace(
+                num_negatives=cfg.num_negatives // plan.neg_expansion)
+            bundle = get_bundle(cfg)
+        state_sds = jax.eval_shape(
+            lambda: gr_train_state(bundle.init_dense(key),
+                                   bundle.init_table(key)))
+        dspecs = PT.gr_param_specs(state_sds.dense, mesh, plan)
+        tspec = PT.gr_table_spec(mesh, plan)
+        sspecs = PT.gr_state_specs(dspecs, tspec)
+        # layout: "pack" = one big jagged buffer per device; "rows" =
+        # row-major padded (one user per shard row) — the XLA-path attention
+        # then only computes within-row pairs (§Perf H1)
+        num_shards = (mesh.size if plan.gr_layout == "pack"
+                      else shape.global_batch)
+        inputs = bundle.input_specs(shape, num_shards=num_shards)
+        bspecs = PT.batch_specs(cfg, shape, mesh, plan, inputs)["batch"]
+        dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        lookup = make_hsp_lookup(
+            mesh, group_axes=("model",) if plan.hsp
+            else tuple(mesh.shape.keys()),
+            dp_axes=dp if plan.hsp else (),
+            compute_dtype=jnp.dtype(cfg.dtype),
+            grad_wire_dtype=jnp.dtype(plan.grad_wire_dtype))
+        from functools import partial as _partial
+        from repro.models.hstu import jagged_pointwise_attention_blocked
+        attn_fn = _partial(jagged_pointwise_attention_blocked,
+                           block=plan.q_block,
+                           score_dtype=jnp.dtype(plan.gr_score_dtype))
+        loss_fn = lambda d, t, b: bundle.loss(
+            d, t, b, lookup_fn=lookup, neg_mode="segmented",
+            neg_segment=plan.neg_segment, expansion=plan.neg_expansion,
+            attn_fn=attn_fn, remat=plan.remat)
+        step = make_gr_train_step(loss_fn, semi_async=True)
+        jitted = jax.jit(step, in_shardings=(
+            PT.to_named(mesh, sspecs), PT.to_named(mesh, bspecs)))
+        args = (state_sds, inputs["batch"])
+        arg_specs = (sspecs, bspecs)
+        return jitted, args, arg_specs, plan, mesh
+
+    if shape.kind == "train":
+        state_sds = jax.eval_shape(
+            lambda: lm_train_state(bundle.init(key),
+                                   jnp.dtype(plan.opt_dtype)))
+        pspecs = PT.lm_param_specs(state_sds.params, mesh, plan)
+        sspecs = PT.state_specs(pspecs, mesh)
+        inputs = bundle.input_specs(shape)
+        bspecs = PT.batch_specs(cfg, shape, mesh, plan, inputs)["batch"]
+        loss_fn = lambda p, b: bundle.loss(p, b, q_block=plan.q_block,
+                                           remat=plan.remat)
+        step = make_lm_train_step(
+            loss_fn, num_microbatches=plan.num_microbatches,
+            accum_dtype=jnp.dtype(plan.accum_dtype))
+        jitted = jax.jit(step, in_shardings=(
+            PT.to_named(mesh, sspecs), PT.to_named(mesh, bspecs)))
+        return jitted, (state_sds, inputs["batch"]), (sspecs, bspecs), plan, mesh
+
+    params_sds = jax.eval_shape(bundle.init, key)
+    pspecs = PT.lm_param_specs(params_sds, mesh, plan)
+    inputs = bundle.input_specs(shape)
+    ispecs = PT.batch_specs(cfg, shape, mesh, plan, inputs)
+
+    if shape.kind == "prefill":
+        fn = lambda p, b: bundle.prefill(p, b, q_block=plan.q_block)
+        jitted = jax.jit(fn, in_shardings=(
+            PT.to_named(mesh, pspecs), PT.to_named(mesh, ispecs["batch"])))
+        return (jitted, (params_sds, inputs["batch"]),
+                (pspecs, ispecs["batch"]), plan, mesh)
+
+    # decode
+    def fn(p, inp):
+        return bundle.decode(p, inp.get("token"), inp["cache"],
+                             inp["cache_index"],
+                             embeds=inp.get("embeds"))
+    jitted = jax.jit(fn, in_shardings=(
+        PT.to_named(mesh, pspecs), PT.to_named(mesh, ispecs)))
+    return jitted, (params_sds, inputs), (pspecs, ispecs), plan, mesh
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             hlo_dir: str = "") -> Dict[str, Any]:
+    cfg = get_arch(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    jitted, args, arg_specs, plan, mesh = build_cell(arch, shape_name,
+                                                     multi_pod)
+    with shard_ctx(mesh, plan.rules):
+        lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    mem = {}
+    if ma is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            mem[f] = int(getattr(ma, f, 0))
+    # analytic per-device state bytes (CPU memory_analysis counts the
+    # whole host platform; the sharded estimate is the per-chip check)
+    state_bytes = _sharded_bytes(args[0], arg_specs[0], mesh)
+    cost = dict(compiled.cost_analysis() or {})
+    hlo = compiled.as_text()
+    if hlo_dir:
+        os.makedirs(hlo_dir, exist_ok=True)
+        tag = f"{arch}__{shape_name}__{mesh_name}"
+        with gzip.open(os.path.join(hlo_dir, tag + ".hlo.gz"), "wt") as f:
+            f.write(hlo)
+    rl = RL.analyze(cfg, shape, mesh_name, mesh.size,
+                    cost, hlo, notes=plan.notes)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": mesh.size, "ok": True,
+        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+        "plan": plan.notes, "num_microbatches": plan.num_microbatches,
+        "memory_analysis": mem,
+        "state_bytes_per_device": state_bytes,
+        "cost": {k: cost.get(k) for k in ("flops", "bytes accessed")},
+        "roofline": rl.to_dict(),
+        "hlo_bytes_len": len(hlo),
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    cells = []
+    if args.all:
+        for name, cfg in ARCHS.items():
+            for s, ok, why in cells_for(cfg):
+                if ok:
+                    cells.append((name, s.name))
+    else:
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape in cells:
+        for mp in meshes:
+            mesh_name = "pod2x16x16" if mp else "pod16x16"
+            tag = f"{arch}__{shape}__{mesh_name}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[skip] {tag} (exists)")
+                continue
+            print(f"[dryrun] {tag} ...", flush=True)
+            try:
+                rec = run_cell(arch, shape, mp,
+                               hlo_dir=os.path.join(args.out, "hlo"))
+                print(f"  ok: compile {rec['t_compile_s']}s, "
+                      f"flops {rec['cost']['flops']:.3e}, "
+                      f"dominant {rec['roofline']['dominant']}")
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "ok": False, "error": str(e)[:2000],
+                       "traceback": traceback.format_exc()[-4000:]}
+                print(f"  FAIL: {str(e)[:200]}")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Sweep driver: every (arch × shape × mesh) dry-run cell, one subprocess
+each (fresh XLA per cell — compilation caches would otherwise accumulate
+across ~100 compiles). Safe to re-run: completed cells are skipped.
+
+    python -m repro.launch.dryrun_all --out results/dryrun [--mesh both]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+
+def list_cells():
+    # config import only — no jax device initialization here
+    from repro.configs import ARCHS
+    from repro.configs.shapes import cells_for
+    cells, skips = [], []
+    for name, cfg in ARCHS.items():
+        for s, ok, why in cells_for(cfg):
+            if ok:
+                cells.append((name, s.name))
+            else:
+                skips.append((name, s.name, why))
+    return cells, skips
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cells, skips = list_cells()
+    with open(os.path.join(args.out, "skips.txt"), "w") as f:
+        for a, s, why in skips:
+            f.write(f"{a}\t{s}\t{why}\n")
+
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    todo = [(a, s, m) for m in meshes for (a, s) in cells]
+    t0 = time.time()
+    for i, (arch, shape, mesh) in enumerate(todo):
+        tag = f"{arch}__{shape}__" + ("pod2x16x16" if mesh == "multi"
+                                      else "pod16x16")
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            continue
+        print(f"[{i+1}/{len(todo)}] {tag} (t+{time.time()-t0:.0f}s)",
+              flush=True)
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--mesh", mesh,
+               "--out", args.out]
+        try:
+            subprocess.run(cmd, timeout=args.timeout, check=False)
+        except subprocess.TimeoutExpired:
+            import json
+            with open(path, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "mesh": tag,
+                           "ok": False, "error": "compile timeout"}, f)
+    print(f"done in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

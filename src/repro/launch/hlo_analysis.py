@@ -1,0 +1,373 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a
+``lax.scan`` over 16 microbatches × 30 layers under-counts FLOPs by three
+orders of magnitude. The dry-run needs per-*step* roofline terms, so this
+module re-derives them from the post-optimization HLO text:
+
+  * parses every computation and its instructions (shapes from definition
+    sites + parameter declarations);
+  * builds the call graph (fusion ``calls=``, while ``body=/condition=``,
+    ``to_apply=``, conditional branches);
+  * extracts while-loop trip counts from the condition computation's
+    ``compare(iter, constant(N))`` pattern (all loops here are lax.scan
+    lowerings with canonical 0..N−1 counters);
+  * DFS from ENTRY accumulating, with loop multipliers,
+      - FLOPs: 2·prod(result)·prod(contracting) per dot/convolution,
+      - HBM bytes: Σ (result + operand bytes) over *top-level* instructions
+        (fusion interiors stay in registers/VMEM and are not counted),
+      - collective bytes per kind (operand sizes).
+
+This is the profile the §Perf loop iterates on — structural, from the
+lowered IR, per the no-real-hardware methodology.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+# ops that are metadata/views — no HBM traffic of their own
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "iota", "get-dimension-size", "opt-barrier"}
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*(?:e\d+m\d+(?:fn)?)?)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s*->\s*.+\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _split_instr(line: str):
+    """Manual instruction-line split (regex breaks on tuple types that
+    contain /*index=N*/ comments). Returns (name, type_str, opcode, rest)
+    or None."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq]
+    s = s[eq + 3:]
+    if s.startswith("("):                       # tuple type: match parens
+        depth = 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_str = s[:i + 1]
+                    tail = s[i + 1:].lstrip()
+                    break
+        else:
+            return None
+    else:
+        sp = s.find(" ")
+        if sp < 0:
+            return None
+        type_str = s[:sp]
+        tail = s[sp + 1:].lstrip()
+    par = tail.find("(")
+    if par < 0:
+        return None
+    opcode = tail[:par]
+    rest = tail[par + 1:]
+    if not re.fullmatch(r"[\w\-]+", opcode):
+        return None
+    return name, type_str, opcode, rest
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|branch_computations)="
+    r"(\{[^}]*\}|%[\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    """(elements, bytes) summed over all shapes in a type string."""
+    elems = byts = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES.get(dt, 4)
+    return elems, byts
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str
+    operands: List[str] = field(default_factory=list)
+    callees: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    params: Dict[str, str]          # param name -> type str
+    instrs: List[Instr] = field(default_factory=list)
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr is not None:
+            is_entry, name, params = hdr.group(1), hdr.group(2), hdr.group(3)
+            pd = {}
+            for pm in re.finditer(r"([\w.\-]+):\s*([^,)]+(?:\)[^,)]*)?)",
+                                  params):
+                pd[pm.group(1)] = pm.group(2)
+            cur = Computation(name=name, is_entry=bool(is_entry), params=pd)
+            comps[name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        parsed = _split_instr(line)
+        if parsed is None:
+            continue
+        name_, type_str, opcode, rest = parsed
+        # operands: up to the closing paren of the argument list
+        depth, end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        arg_str = rest[:end]
+        attr_str = rest[end:]
+        ins = Instr(name=name_, type_str=type_str.strip(), opcode=opcode,
+                    rest=rest, operands=_OPERAND_RE.findall(arg_str))
+        for cm in _CALL_ATTR_RE.finditer(attr_str):
+            tgt = cm.group(1)
+            if tgt.startswith("{"):
+                ins.callees += _OPERAND_RE.findall(tgt)
+            else:
+                ins.callees.append(tgt.lstrip("%"))
+        cur.instrs.append(ins)
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Trip count from the canonical scan condition: compare(i, const N)."""
+    consts: Dict[str, int] = {}
+    for ins in cond.instrs:
+        cm = _CONST_RE.search(ins.opcode + "(" + ins.rest)
+        if ins.opcode == "constant":
+            m2 = re.search(r"constant\((\d+)\)", "constant(" + ins.rest)
+            if m2:
+                consts[ins.name] = int(m2.group(1))
+    for ins in cond.instrs:
+        if ins.opcode != "compare":
+            continue
+        direction = "LT"
+        dm = re.search(r"direction=(\w+)", ins.rest)
+        if dm:
+            direction = dm.group(1)
+        for op in ins.operands:
+            if op in consts:
+                n = consts[op]
+                return n + 1 if direction in ("LE", "GE") else n
+    return 1
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_OPS})
+
+    def scaled(self, k: float) -> "Costs":
+        return Costs(self.flops * k, self.bytes * k,
+                     {kk: v * k for kk, v in self.coll_bytes.items()})
+
+    def add(self, o: "Costs") -> None:
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for k, v in o.coll_bytes.items():
+            self.coll_bytes[k] += v
+
+
+class Analyzer:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self.entry = next((c for c in self.comps.values() if c.is_entry),
+                          None)
+        self._sizes_cache: Dict[str, Dict[str, Tuple[int, int]]] = {}
+        self._memo: Dict[Tuple[str, bool], Costs] = {}
+
+    def _has_sparse_access(self, ins: Instr) -> bool:
+        """Fusion whose computation gathers/scatters from a large operand."""
+        for c in ins.callees:
+            comp = self.comps.get(c)
+            if comp is None:
+                continue
+            for i2 in comp.instrs:
+                if i2.opcode in ("gather", "dynamic-slice",
+                                 "dynamic-update-slice", "scatter"):
+                    return True
+        return False
+
+    def _is_pure_convert_instr(self, ins: Instr) -> bool:
+        if ins.opcode == "convert":
+            return True       # bare dtype cast — fused away on TPU
+        return any(self._is_pure_convert(c) for c in ins.callees)
+
+    def _is_pure_convert(self, name: str) -> bool:
+        """Fusion computations that only dtype-convert a parameter.
+
+        XLA:CPU materializes f32 copies of bf16 weights feeding
+        preferred_element_type=f32 dots; the TPU MXU consumes bf16 operands
+        with f32 accumulation natively, so these buffers don't exist on the
+        target hardware — exclude them from the HBM byte model.
+        """
+        comp = self.comps.get(name)
+        if comp is None:
+            return False
+        real = [i for i in comp.instrs if i.opcode not in
+                ("parameter", "bitcast", "reshape", "copy")]
+        return (len(real) >= 1 and
+                all(i.opcode == "convert" for i in real))
+
+    def _sizes(self, comp: Computation) -> Dict[str, Tuple[int, int]]:
+        if comp.name not in self._sizes_cache:
+            d = {}
+            for pn, pt in comp.params.items():
+                d[pn] = _shape_elems_bytes(pt)
+            for ins in comp.instrs:
+                d[ins.name] = _shape_elems_bytes(ins.type_str)
+            self._sizes_cache[comp.name] = d
+        return self._sizes_cache[comp.name]
+
+    def _dot_flops(self, comp: Computation, ins: Instr) -> float:
+        sizes = self._sizes(comp)
+        out_elems, _ = _shape_elems_bytes(ins.type_str)
+        cm = _CONTRACT_RE.search(ins.rest)
+        contract = 1
+        if cm is not None and ins.operands:
+            lhs = ins.operands[0]
+            # lhs dims from its type string
+            lhs_type = None
+            for i2 in comp.instrs:
+                if i2.name == lhs:
+                    lhs_type = i2.type_str
+                    break
+            if lhs_type is None:
+                lhs_type = comp.params.get(lhs)
+            if lhs_type is not None:
+                sm = _SHAPE_RE.search(lhs_type)
+                if sm:
+                    dims = [int(x) for x in sm.group(2).split(",") if x]
+                    for ci in cm.group(1).split(","):
+                        if ci and int(ci) < len(dims):
+                            contract *= dims[int(ci)]
+        return 2.0 * out_elems * contract
+
+    def comp_costs(self, name: str, top_level: bool) -> Costs:
+        key = (name, top_level)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(name)
+        out = Costs()
+        if comp is None:
+            self._memo[key] = out
+            return out
+        sizes = self._sizes(comp)
+        for ins in comp.instrs:
+            # flops from dots/convs wherever they appear
+            if ins.opcode in ("dot", "convolution"):
+                out.flops += self._dot_flops(comp, ins)
+            # collective bytes (operand sizes), with loop scaling via DFS
+            base = (ins.opcode[:-6] if ins.opcode.endswith("-start")
+                    else ins.opcode)
+            if base in COLLECTIVE_OPS and not ins.opcode.endswith("-done"):
+                out.coll_bytes[base] += sum(
+                    sizes.get(o, (0, 0))[1] for o in ins.operands)
+            # HBM bytes: only at fusion/top boundaries
+            if top_level and ins.opcode not in _FREE_OPS:
+                if (ins.opcode in ("fusion", "convert")
+                        and self._is_pure_convert_instr(ins)):
+                    pass        # TPU-native mixed-precision dot operand
+                else:
+                    _, rb = _shape_elems_bytes(ins.type_str)
+                    obs = [sizes.get(o, (0, 0))[1] for o in ins.operands]
+                    # Sparse-access ops touch ~result-sized slices of their
+                    # big operand, not the whole buffer: charging the full
+                    # table per gather would claim a 1 GB read per 128-row
+                    # embedding fetch. Drop the largest operand for
+                    # gather/slice/scatter (and fusions wrapping them) and
+                    # charge the result+indices instead. In-place DUS
+                    # writes only its update window.
+                    sparse = ins.opcode in ("gather", "dynamic-slice",
+                                            "dynamic-update-slice",
+                                            "scatter")
+                    if ins.opcode == "fusion" and not sparse:
+                        sparse = self._has_sparse_access(ins)
+                    if sparse and obs:
+                        obs.remove(max(obs))
+                    out.bytes += rb + sum(obs)
+            # recurse
+            if ins.opcode == "while":
+                bm = re.search(r"body=%([\w.\-]+)", ins.rest)
+                # XLA annotates loop trip counts post-optimization:
+                #   backend_config={"known_trip_count":{"n":"10"},...}
+                tm = re.search(r'known_trip_count[^0-9]*(\d+)', ins.rest)
+                if tm:
+                    trips = int(tm.group(1))
+                else:
+                    cm3 = re.search(r"condition=%([\w.\-]+)", ins.rest)
+                    trips = (_trip_count(self.comps[cm3.group(1)])
+                             if cm3 and cm3.group(1) in self.comps else 1)
+                if bm:
+                    out.add(self.comp_costs(bm.group(1), True).scaled(trips))
+            elif ins.opcode == "fusion":
+                for c in ins.callees:
+                    out.add(self.comp_costs(c, False))
+            elif ins.opcode in ("call", "custom-call", "conditional",
+                                "map", "reduce", "sort", "scatter",
+                                "reduce-window", "select-and-scatter",
+                                "all-reduce", "reduce-scatter"):
+                for c in ins.callees:
+                    # applied computations are tiny; count once (flops only)
+                    sub = self.comp_costs(c, False)
+                    out.flops += sub.flops
+        self._memo[key] = out
+        return out
+
+    def totals(self) -> Costs:
+        if self.entry is None:
+            return Costs()
+        return self.comp_costs(self.entry.name, True)
+
+
+def analyze_text(text: str) -> Costs:
+    return Analyzer(text).totals()

@@ -1,0 +1,352 @@
+"""Per-(arch × shape × mesh) parallelism plan.
+
+Maps every tensor in the system onto the production mesh:
+
+  * dense backbone — TP over ``model`` (Megatron column/row pairs, expert
+    dim for MoE, SSM inner dim), FSDP (ZeRO-3-style use-time all-gather)
+    over ``data``, DP over ``pod``×``data``. FSDP is pod-local by design:
+    weight gathers ride fast intra-pod ICI; only gradient reductions cross
+    the pod axis.
+  * activations — batch over DP axes, Megatron-SP (sequence over ``model``)
+    between blocks for train/prefill, KV-cache sequence over ``data`` for
+    the B=1 long-context decode cells.
+  * GR (paper) — dense backbone replicated (it is ≤0.2B), jagged batch over
+    *all* axes, embedding table vocab-sharded per HSP (`model` within a
+    group) or globally (baseline).
+  * microbatching — num_microbatches chosen so one microbatch holds
+    dp_size·samples_per_shard samples; grad-accum / optimizer-moment dtypes
+    drop to bf16 only where the HBM budget demands it (jamba-398B).
+
+Divisibility guard: any tensor dim not divisible by its mapped axis size is
+replicated instead (e.g. mamba2's vocab 50280 on a 16-way axis — Megatron
+would pad; we replicate and record it in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeConfig
+
+Axes = Any
+
+
+@dataclass(frozen=True)
+class Plan:
+    arch: str
+    shape: str
+    rules: Dict[str, Axes]              # activation logical axes
+    dp_axes: Tuple[str, ...]
+    fsdp_axes: Optional[Tuple[str, ...]]
+    num_microbatches: int
+    accum_dtype: str
+    opt_dtype: str
+    q_block: int
+    remat: bool
+    hsp: bool = True                    # GR: hierarchical (vs global) table
+    gr_layout: str = "pack"             # pack (one jagged buffer/device) |
+                                        # rows (row-major padded, XLA path)
+    grad_wire_dtype: str = "float32"    # sparse-exchange wire dtype
+    neg_expansion: int = 1              # §4.3.3 logit sharing: fetch R/k
+                                        # negatives, expand k× via sharing
+    neg_segment: int = 128              # §4.3.1 segment size
+    gr_score_dtype: str = "float32"     # XLA-path attention score pipeline
+    attn_tp: bool = True                # False = context-parallel arch:
+                                        # attention weights not head-sharded
+    notes: str = ""
+
+
+def _apply_overrides(plan: Plan) -> Plan:
+    """Hillclimb knob: REPRO_PLAN_OVERRIDES='{"num_microbatches":4,...}'
+    patches every plan — used by the §Perf iteration loop so a hypothesis
+    is one env var away from a recompile."""
+    import json
+    import os
+    raw = os.environ.get("REPRO_PLAN_OVERRIDES")
+    if not raw:
+        return plan
+    kw = json.loads(raw)
+    return dataclasses.replace(
+        plan, **{k: v for k, v in kw.items() if hasattr(plan, k)},
+        notes=plan.notes + f" | overrides={kw}")
+
+
+def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    axes = (axes,) if isinstance(axes, str) else axes
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def make_plan(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> Plan:
+    dp = _dp_axes(mesh)
+    dp_size = _axsize(mesh, dp)
+    big = cfg.d_model * cfg.num_layers >= 8192 * 64      # jamba-class
+    opt_dtype = "bfloat16" if big else "float32"
+    accum_dtype = "bfloat16" if big else "float32"
+
+    if cfg.gr:
+        all_axes = tuple(mesh.shape.keys())
+        rules = {"batch": all_axes, "tp": None, "act_sp": None,
+                 "vocab": "model"}
+        return _apply_overrides(Plan(
+            cfg.name, shape.name, rules, dp_axes=all_axes,
+            fsdp_axes=None, num_microbatches=1,
+            accum_dtype="float32", opt_dtype="float32",
+            q_block=512, remat=True, hsp=True,
+            notes="GR: dense replicated, table HSP over model axis"))
+
+    if shape.kind == "train":
+        if cfg.d_model >= 8192:
+            per_shard = 1
+        elif cfg.d_model >= 4096:
+            per_shard = 2
+        else:
+            per_shard = 4
+        mb_samples = dp_size * per_shard
+        num_mb = max(1, shape.global_batch // mb_samples)
+        while shape.global_batch % num_mb or \
+                (shape.global_batch // num_mb) % dp_size:
+            num_mb -= 1
+        rules = {"batch": dp if len(dp) > 1 else dp[0],
+                 "act_sp": "model", "tp": "model", "vocab": "model"}
+        attn_tp = cfg.num_heads == 0 or \
+            cfg.num_heads % mesh.shape["model"] == 0
+        return _apply_overrides(Plan(
+            cfg.name, shape.name, rules, dp_axes=dp,
+            fsdp_axes=("data",), num_microbatches=num_mb,
+            accum_dtype=accum_dtype, opt_dtype=opt_dtype,
+            q_block=min(1024, shape.seq_len), remat=True, attn_tp=attn_tp,
+            notes=f"TP16 + SP + FSDP(data) + DP, {num_mb} microbatches"
+                  + ("" if attn_tp else " + CP attention")))
+
+    if shape.kind == "prefill":
+        rules = {"batch": dp if len(dp) > 1 else dp[0],
+                 "act_sp": "model", "tp": "model", "vocab": "model"}
+        return _apply_overrides(Plan(
+            cfg.name, shape.name, rules, dp_axes=dp,
+            fsdp_axes=("data",), num_microbatches=1,
+            accum_dtype=accum_dtype, opt_dtype=opt_dtype,
+            q_block=1024, remat=False,
+            notes="prefill: TP + SP, batch over DP"))
+
+    # decode
+    if shape.global_batch >= dp_size:
+        batch_ax: Axes = dp if len(dp) > 1 else dp[0]
+        cache_seq_ax: Axes = None
+    else:
+        batch_ax = None                      # B=1 long-context
+        cache_seq_ax = dp if len(dp) > 1 else dp[0]
+    rules = {"batch": batch_ax, "act_sp": None, "tp": "model",
+             "vocab": "model", "cache_seq": cache_seq_ax}
+    return _apply_overrides(Plan(
+        cfg.name, shape.name, rules, dp_axes=dp,
+        fsdp_axes=None, num_microbatches=1,
+        accum_dtype=accum_dtype, opt_dtype=opt_dtype,
+        q_block=1, remat=False,
+        notes=("decode: batch over DP" if batch_ax else
+               "long-context decode: KV-cache sequence over data")))
+
+
+# --------------------------------------------------------------------------
+# spec construction helpers
+# --------------------------------------------------------------------------
+
+def _guard(mesh: Mesh, shape: Tuple[int, ...], dims) -> P:
+    """Drop any axis that does not divide its dim."""
+    out = []
+    for size, ax in zip(shape, dims):
+        if ax is None:
+            out.append(None)
+            continue
+        if size % _axsize(mesh, ax) == 0:
+            out.append(ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _leaf_spec_lm(path: Tuple, leaf, mesh: Mesh, plan: Plan) -> P:
+    """Param partition rules for the LM stack (see module docstring)."""
+    keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+    keys = [k for k in keys if isinstance(k, str)]
+    name = keys[-1] if keys else ""
+    fsdp = plan.fsdp_axes[0] if plan.fsdp_axes else None
+    tp = "model"
+    shp = leaf.shape
+    nd = len(shp)
+
+    def spec(*dims):
+        return _guard(mesh, shp, dims)
+
+    if name == "embed":
+        return spec(tp, fsdp)
+    if name == "lm_head":
+        return spec(fsdp, tp)
+    if name in ("wq", "wk", "wv"):
+        # context-parallel archs (heads % tp != 0): head dims stay whole;
+        # sharding them would force score all-gathers (§Perf S1 audit)
+        return spec(None, fsdp, tp if plan.attn_tp else None)
+    if name == "wo":
+        return spec(None, tp if plan.attn_tp else None, fsdp)
+    if name in ("w_in", "w_gate", "in_z", "in_x"):
+        return spec(None, fsdp, tp)            # (Np, d, out): column-parallel
+    if name in ("w_out", "out_proj"):
+        return spec(None, tp, fsdp)            # (Np, in, d): row-parallel
+    if name in ("in_bc", "in_dt"):
+        return spec(None, fsdp, tp)
+    if name in ("shared_w_in", "shared_w_gate"):
+        return spec(None, fsdp, tp)
+    if name == "shared_w_out":
+        return spec(None, tp, fsdp)
+    if name == "router":
+        return spec(None, None, None)
+    if name in ("w_in", "w_gate", "w_out") and nd == 4:
+        pass  # handled below via rank check
+    if nd == 4:                                # MoE expert weights (Np,E,a,b)
+        if name == "w_out":
+            return spec(None, tp, None, fsdp)
+        return spec(None, tp, fsdp, None)
+    return P(*([None] * nd))                   # norms, biases, scalars
+
+
+def _moe_aware_leaf_spec(path, leaf, mesh, plan) -> P:
+    # expert tensors are rank-4 ((Np, E, din, dout)); route them first
+    keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+    keys = [k for k in keys if isinstance(k, str)]
+    name = keys[-1] if keys else ""
+    shp = leaf.shape
+    if len(shp) == 4 and name in ("w_in", "w_gate", "w_out"):
+        fsdp = plan.fsdp_axes[0] if plan.fsdp_axes else None
+        # FSDP on the f (hidden) dim, not d: with d sharded, every expert
+        # matmul partial-sums its (E,C,f) fp32 hidden over `data` (measured
+        # 290 GB/step all-reduces on jamba); f-sharding keeps h local and
+        # moves the reduction to the 3× smaller (E,C,d) output.
+        if name == "w_out":
+            return _guard(mesh, shp, (None, "model", fsdp, None))
+        return _guard(mesh, shp, (None, "model", None, fsdp))
+    return _leaf_spec_lm(path, leaf, mesh, plan)
+
+
+def lm_param_specs(params_shape: Any, mesh: Mesh, plan: Plan) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _moe_aware_leaf_spec(p, l, mesh, plan), params_shape)
+
+
+def gr_param_specs(dense_shape: Any, mesh: Mesh, plan: Plan):
+    """GR dense backbone ≤0.2B → replicated (the paper's layout)."""
+    return jax.tree.map(lambda l: P(*([None] * len(l.shape))), dense_shape)
+
+
+def gr_table_spec(mesh: Mesh, plan: Plan) -> P:
+    if plan.hsp:
+        return P("model", None)
+    axes = tuple(mesh.shape.keys())
+    return P(axes, None)
+
+
+# --------------------------------------------------------------------------
+# batch / cache / state specs
+# --------------------------------------------------------------------------
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                plan: Plan, inputs: Dict[str, Any]) -> Dict[str, Any]:
+    """PartitionSpec tree matching model_zoo input_specs output."""
+    b = plan.rules.get("batch")
+    seq_ax = plan.rules.get("cache_seq")
+
+    def bspec(x):
+        return _guard(mesh, x.shape, (b,) + (None,) * (len(x.shape) - 1))
+
+    out: Dict[str, Any] = {}
+    if "batch" in inputs:
+        out["batch"] = {k: bspec(v) for k, v in inputs["batch"].items()}
+        if cfg.gr:
+            out["batch"]["rng"] = P(None)
+        return out
+    # decode inputs
+    for k, v in inputs.items():
+        if k == "cache_index":
+            out[k] = P()
+        elif k == "cache":
+            out[k] = cache_specs(cfg, v, mesh, plan)
+        else:
+            out[k] = bspec(v)
+    return out
+
+
+def cache_specs(cfg: ArchConfig, cache_shape: Any, mesh: Mesh,
+                plan: Plan) -> Any:
+    b = plan.rules.get("batch")
+    seq_ax = plan.rules.get("cache_seq")
+
+    def leaf(l):
+        shp = l.shape
+        if len(shp) == 5:        # kv cache (Np, B, S, Hkv, hd)
+            return _guard(mesh, shp, (None, b, seq_ax, "model", None))
+        if len(shp) == 4:        # ssm state (Np, B, H, P*N?) -> (Np,B,H,P[,N])
+            return _guard(mesh, shp, (None, b, "model", None))
+        if len(shp) == 3:        # conv state (Np, B, K-1) won't occur; safe
+            return _guard(mesh, shp, (None, b, None))
+        return P(*([None] * len(shp)))
+
+    def leaf5(l):
+        shp = l.shape
+        dims = [None, b] + [None] * (len(shp) - 2)
+        if len(shp) == 5:
+            dims = [None, b, seq_ax, "model", None]
+        elif len(shp) == 4:      # conv (Np,B,K-1,C) or ssm (Np,B,H,P)
+            dims = [None, b, None, "model"]
+        return _guard(mesh, shp, tuple(dims))
+
+    def route(l):
+        shp = l.shape
+        if len(shp) == 5:
+            # distinguish kv (Np,B,S,Hkv,hd) from ssm (Np,B,H,P,N):
+            # kv has S = large dim at index 2
+            if shp[2] >= 1024:
+                return _guard(mesh, shp, (None, b, seq_ax, "model", None))
+            return _guard(mesh, shp, (None, b, "model", None, None))
+        if len(shp) == 4:        # conv (Np, B, K-1, C)
+            return _guard(mesh, shp, (None, b, None, "model"))
+        return P(*([None] * len(shp)))
+
+    return jax.tree.map(route, cache_shape)
+
+
+def state_specs(param_specs: Any, mesh: Mesh) -> Any:
+    """AdamW/LMTrainState spec tree mirroring params (count/step = P())."""
+    from repro.training.trainer import LMTrainState
+    from repro.training.optim import AdamWState
+    return LMTrainState(
+        params=param_specs,
+        opt=AdamWState(mu=param_specs, nu=param_specs, count=P()),
+        step=P())
+
+
+def gr_state_specs(dense_specs: Any, table_spec: P) -> Any:
+    from repro.training.trainer import GRTrainState
+    from repro.training.optim import AdamWState
+    return GRTrainState(
+        dense=dense_specs,
+        dense_opt=AdamWState(mu=dense_specs, nu=dense_specs, count=P()),
+        table=table_spec, table_accum=table_spec, pending_grad=table_spec,
+        step=P())
+
+
+def to_named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

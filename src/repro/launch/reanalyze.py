@@ -1,0 +1,48 @@
+"""Re-derive roofline fields of existing dry-run JSONs from the cached
+post-SPMD HLO (results/dryrun/hlo/*.hlo.gz) — lets the byte/flop model
+evolve without recompiling 104 cells.
+
+    PYTHONPATH=src python -m repro.launch.reanalyze --dir results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from repro.configs import get_arch
+from repro.configs.shapes import SHAPES_BY_NAME
+from repro.launch import roofline as RL
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    n = 0
+    for jf in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        d = json.load(open(jf))
+        if not d.get("ok"):
+            continue
+        tag = f"{d['arch']}__{d['shape']}__{d['mesh']}"
+        hf = os.path.join(args.dir, "hlo", tag + ".hlo.gz")
+        if not os.path.exists(hf):
+            print(f"[skip] {tag}: no cached HLO")
+            continue
+        with gzip.open(hf, "rt") as f:
+            hlo = f.read()
+        cfg = get_arch(d["arch"])
+        shape = SHAPES_BY_NAME[d["shape"]]
+        rl = RL.analyze(cfg, shape, d["mesh"], d["chips"],
+                        d.get("cost", {}), hlo, notes=d.get("plan", ""))
+        d["roofline"] = rl.to_dict()
+        with open(jf, "w") as f:
+            json.dump(d, f, indent=1, default=str)
+        n += 1
+    print(f"re-analyzed {n} cells")
+
+
+if __name__ == "__main__":
+    main()

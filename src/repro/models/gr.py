@@ -1,0 +1,75 @@
+"""GR model = stack of HSTU/FuXi blocks over a *packed* jagged token buffer.
+
+The sparse stage (embedding lookup / HSP) happens OUTSIDE this module — the
+dense model consumes already-looked-up embeddings ``(cap, d)`` plus the
+jagged structure (offsets, timestamps). This sparse/dense split is exactly
+the paper's execution model (§4.2.2 semi-async: sparse and dense are
+separate pipeline stages/streams).
+
+Multi-device layout: the global batch is ``(G, cap, ...)`` with G = number
+of data shards (one jagged pack per device, built by the load balancer
+§4.1.3) and the per-shard model vmapped over G.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.fuxi import fuxi_block, init_fuxi_block
+from repro.models.hstu import hstu_block, init_hstu_block
+from repro.models.sasrec import init_sasrec_block, sasrec_block
+
+Params = Dict[str, Any]
+
+_BLOCKS = {
+    "hstu": (init_hstu_block, hstu_block),
+    "fuxi": (init_fuxi_block, fuxi_block),
+    "sasrec": (init_sasrec_block, sasrec_block),
+}
+
+
+def init_gr(key, cfg: ArchConfig, dtype=None) -> Params:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    init_fn = _BLOCKS[cfg.gr_block or "hstu"][0]
+    keys = jax.random.split(key, cfg.num_layers)
+    blocks = jax.vmap(lambda k: init_fn(k, cfg, dtype))(keys)
+    return {"blocks": blocks,
+            "out_ln_w": jnp.ones((cfg.d_model,), dtype),
+            "out_ln_b": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def gr_hidden(params: Params, cfg: ArchConfig, x: jax.Array,
+              offsets: jax.Array, timestamps: jax.Array,
+              *, attn_fn: Optional[Callable] = None,
+              remat: bool = True) -> jax.Array:
+    """x: (cap, d) packed embeddings → (cap, d) hidden states."""
+    block_fn = _BLOCKS[cfg.gr_block or "hstu"][1]
+
+    def body(x, bp):
+        f = lambda x_: block_fn(bp, cfg, x_, offsets, timestamps,
+                                attn_fn=attn_fn)
+        if remat:
+            f = jax.checkpoint(f, policy=jax.checkpoint_policies.nothing_saveable)
+        return f(x), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    # final non-affine-free layernorm over the hidden stream
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = y * params["out_ln_w"].astype(jnp.float32) + params["out_ln_b"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def gr_hidden_sharded(params: Params, cfg: ArchConfig, x: jax.Array,
+                      offsets: jax.Array, timestamps: jax.Array,
+                      *, attn_fn: Optional[Callable] = None,
+                      remat: bool = True) -> jax.Array:
+    """Batched over shards: x (G, cap, d), offsets (G, B+1), ts (G, cap)."""
+    fn = partial(gr_hidden, params, cfg, attn_fn=attn_fn, remat=remat)
+    return jax.vmap(fn)(x, offsets, timestamps)

@@ -1,0 +1,276 @@
+"""HSTU (Hierarchical Sequential Transduction Unit) — the paper's GR backbone.
+
+Jagged-native implementation: every tensor is packed ``(capacity, ...)`` with
+int32 row offsets (``core.jagged.JaggedBatch`` layout). Attention is
+*pointwise* (softmax-free):
+
+    U,V,Q,K = split(SiLU(f1(norm(X))))
+    A       = SiLU(QK^T * scale + RAB(pos, time)) * same_seg_causal / n_row
+    Y       = f2(norm(A V) * U);  out = X + Y
+
+RAB = per-head relative-position bucket table + bucketized relative-time
+table (paper Appendix A: 32 time buckets). The XLA path here is the pure-jnp
+oracle and the "blocked" variant is the flash-style O(block²) memory scan;
+the TPU hot-spot kernel lives in ``repro.kernels.jagged_attention`` and is
+validated against :func:`jagged_pointwise_attention` (this file).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RABConfig
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# RAB — relative attention bias
+# --------------------------------------------------------------------------
+
+def init_rab(key, rab: RABConfig, num_heads: int) -> Params:
+    kp, kt = jax.random.split(key)
+    p: Params = {}
+    if rab.use_pos:
+        p["pos_table"] = (jax.random.normal(kp, (rab.num_pos_buckets, num_heads),
+                                            jnp.float32) * 0.02)
+    if rab.use_time:
+        p["time_table"] = (jax.random.normal(kt, (rab.num_time_buckets, num_heads),
+                                             jnp.float32) * 0.02)
+    return p
+
+
+def pos_bucket(qpos: jax.Array, kpos: jax.Array, num_buckets: int) -> jax.Array:
+    """Relative-position bucket: clip(qpos - kpos, 0, npb-1). (…q,…k) ints."""
+    d = qpos[..., :, None] - kpos[..., None, :]
+    return jnp.clip(d, 0, num_buckets - 1)
+
+
+def time_bucket(qt: jax.Array, kt: jax.Array, rab: RABConfig) -> jax.Array:
+    """Bucketized |Δt|: floor(log10(1+Δt)/scale), clipped (paper: 32 buckets)."""
+    dt = jnp.abs(qt[..., :, None] - kt[..., None, :]).astype(jnp.float32)
+    b = jnp.floor(jnp.log10(1.0 + dt) / rab.time_bucket_scale).astype(jnp.int32)
+    return jnp.clip(b, 0, rab.num_time_buckets - 1)
+
+
+def rab_bias(p: Params, rab: RABConfig, qpos, kpos, qt, kt) -> jax.Array:
+    """Bias (…, q, k, H) fp32 from bucket tables (the oracle path)."""
+    out = 0.0
+    if rab.use_pos and "pos_table" in p:
+        out = out + p["pos_table"][pos_bucket(qpos, kpos, rab.num_pos_buckets)]
+    if rab.use_time and "time_table" in p:
+        out = out + p["time_table"][time_bucket(qt, kt, rab)]
+    return out
+
+
+def functional_time_bias(p: Params, qt, kt) -> jax.Array:
+    """FuXi-γ exponential-power temporal encoder (functional, table-free):
+
+        bias_h(Δt) = amp_h · exp( −(Δt / σ_h)^{ρ_h} )
+
+    Elementwise-computable in-kernel (no gather) — the Ascend paper's FuXi
+    variant uses functional time encodings [19]; this is its TPU-friendly form.
+    """
+    dt = jnp.abs(qt[..., :, None] - kt[..., None, :]).astype(jnp.float32)
+    sigma = jnp.exp(p["time_log_sigma"])                    # (H,)
+    rho = jax.nn.sigmoid(p["time_rho"]) * 1.5 + 0.25        # (H,) in (0.25, 1.75)
+    z = (dt[..., None] + 1e-6) / sigma
+    return p["time_amp"] * jnp.exp(-jnp.power(z, rho))
+
+
+# --------------------------------------------------------------------------
+# jagged pointwise attention — pure-jnp oracle + blocked scan variant
+# --------------------------------------------------------------------------
+
+def _silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def jagged_pointwise_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    offsets: jax.Array, timestamps: jax.Array,
+    rab_params: Params, rab: Optional[RABConfig],
+    *, time_mode: str = "bucket", causal: bool = True,
+) -> jax.Array:
+    """Oracle: full (cap, cap) materialization. q,k:(cap,H,dqk) v:(cap,H,dv).
+
+    A = SiLU(q·k^T·scale + rab) ⊙ mask / n_row;  y = A·v.  Returns (cap,H,dv).
+    """
+    cap, H, dqk = q.shape
+    scale = 1.0 / math.sqrt(dqk)
+    slot = jnp.arange(cap, dtype=jnp.int32)
+    total = offsets[-1]
+    seg = jnp.searchsorted(offsets, slot, side="right") - 1
+    seg = jnp.where(slot < total, seg, -1)
+    lengths = offsets[1:] - offsets[:-1]
+    pos = slot - offsets[jnp.clip(seg, 0, offsets.shape[0] - 2)]
+
+    s = jnp.einsum("qhd,khd->qkh", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if rab is not None:
+        if time_mode == "bucket":
+            s = s + rab_bias(rab_params, rab, pos, pos, timestamps, timestamps)
+        else:
+            if rab.use_pos and "pos_table" in rab_params:
+                s = s + rab_params["pos_table"][
+                    pos_bucket(pos, pos, rab.num_pos_buckets)]
+            s = s + functional_time_bias(rab_params, timestamps, timestamps)
+    a = _silu(s)
+    mask = (seg[:, None] == seg[None, :]) & (seg[:, None] >= 0)
+    if causal:
+        mask &= slot[:, None] >= slot[None, :]
+    n = jnp.maximum(lengths[jnp.clip(seg, 0, offsets.shape[0] - 2)], 1)
+    a = jnp.where(mask[..., None], a, 0.0) / n[:, None, None].astype(jnp.float32)
+    return jnp.einsum("qkh,khd->qhd", a.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(v.dtype)
+
+
+def jagged_pointwise_attention_blocked(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    offsets: jax.Array, timestamps: jax.Array,
+    rab_params: Params, rab: Optional[RABConfig],
+    *, block: int = 512, time_mode: str = "bucket", causal: bool = True,
+    score_dtype=jnp.float32,
+) -> jax.Array:
+    """Flash-style double-blocked scan: peak memory O(block²·H), identical
+    math to the oracle. This is the XLA-path used in the real model; the
+    Pallas kernel additionally skips fully-masked (cross-row) blocks.
+
+    ``score_dtype=bf16`` streams the post-matmul score pipeline (bias +
+    SiLU + mask) at half width — on the XLA path those are HBM-resident
+    (block², H) buffers; the Pallas kernel holds them in fp32 VMEM for
+    free. Softmax-free attention tolerates this well (no exp blow-up);
+    loss-parity is checked in tests/test_models.py."""
+    cap, H, dqk = q.shape
+    dv = v.shape[-1]
+    scale = 1.0 / math.sqrt(dqk)
+    block = min(block, cap)
+    assert cap % block == 0, (cap, block)
+    nb = cap // block
+
+    slot = jnp.arange(cap, dtype=jnp.int32)
+    total = offsets[-1]
+    seg = jnp.searchsorted(offsets, slot, side="right") - 1
+    seg = jnp.where(slot < total, seg, -1)
+    lengths = offsets[1:] - offsets[:-1]
+    pos = slot - offsets[jnp.clip(seg, 0, offsets.shape[0] - 2)]
+    n_row = jnp.maximum(lengths[jnp.clip(seg, 0, offsets.shape[0] - 2)], 1)
+
+    @partial(jax.checkpoint,
+             policy=jax.checkpoint_policies.nothing_saveable)
+    def q_step(_, qi):
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * block, block, 0)
+        qseg = jax.lax.dynamic_slice_in_dim(seg, qi * block, block, 0)
+        qpos = jax.lax.dynamic_slice_in_dim(pos, qi * block, block, 0)
+        qts = jax.lax.dynamic_slice_in_dim(timestamps, qi * block, block, 0)
+        qslot = jax.lax.dynamic_slice_in_dim(slot, qi * block, block, 0)
+        qn = jax.lax.dynamic_slice_in_dim(n_row, qi * block, block, 0)
+
+        # recompute (not stash) each kv block's scores in backward — the
+        # inner scan would otherwise stack O(nb·block²·H) residuals
+        @partial(jax.checkpoint,
+                 policy=jax.checkpoint_policies.nothing_saveable)
+        def kv_step(acc, ki):
+            kb = jax.lax.dynamic_slice_in_dim(k, ki * block, block, 0)
+            vb = jax.lax.dynamic_slice_in_dim(v, ki * block, block, 0)
+            kseg = jax.lax.dynamic_slice_in_dim(seg, ki * block, block, 0)
+            kpos = jax.lax.dynamic_slice_in_dim(pos, ki * block, block, 0)
+            kts = jax.lax.dynamic_slice_in_dim(timestamps, ki * block, block, 0)
+            kslot = jax.lax.dynamic_slice_in_dim(slot, ki * block, block, 0)
+            s = (jnp.einsum("qhd,khd->qkh", qb, kb,
+                            preferred_element_type=jnp.float32)
+                 * scale).astype(score_dtype)
+            if rab is not None:
+                if time_mode == "bucket":
+                    s = s + rab_bias(rab_params, rab, qpos, kpos, qts,
+                                     kts).astype(score_dtype)
+                else:
+                    if rab.use_pos and "pos_table" in rab_params:
+                        s = s + rab_params["pos_table"][
+                            pos_bucket(qpos, kpos, rab.num_pos_buckets)
+                        ].astype(score_dtype)
+                    s = s + functional_time_bias(rab_params, qts,
+                                                 kts).astype(score_dtype)
+            a = _silu(s)
+            m = (qseg[:, None] == kseg[None, :]) & (qseg[:, None] >= 0)
+            if causal:
+                m &= qslot[:, None] >= kslot[None, :]
+            # keep the whole mask/weight pipeline in score_dtype — a mixed
+            # f32 multiplier would silently re-promote every (bq,bk,H)
+            # buffer (§Perf H4 audit)
+            a = jnp.where(m[..., None], a, jnp.zeros((), score_dtype))
+            acc = acc + jnp.einsum("qkh,khd->qhd", a.astype(vb.dtype), vb,
+                                   preferred_element_type=jnp.float32)
+            return acc, None
+
+        acc0 = jnp.zeros((block, H, dv), jnp.float32)
+        acc, _ = jax.lax.scan(kv_step, acc0, jnp.arange(nb, dtype=jnp.int32))
+        acc = acc / qn[:, None, None].astype(jnp.float32)
+        return None, acc.astype(v.dtype)
+
+    _, out = jax.lax.scan(q_step, None, jnp.arange(nb, dtype=jnp.int32))
+    return out.reshape(cap, H, dv)
+
+
+# --------------------------------------------------------------------------
+# HSTU block
+# --------------------------------------------------------------------------
+
+def init_hstu_block(key, cfg: ArchConfig, dtype) -> Params:
+    d, H, dqk = cfg.d_model, cfg.num_heads, cfg.qkv_dim or cfg.resolved_head_dim
+    dv = dqk
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {
+        "ln_w": jnp.ones((d,), dtype),
+        "ln_b": jnp.zeros((d,), dtype),
+        "w_uvqk": (jax.random.normal(k1, (d, H * (2 * dv + 2 * dqk)), jnp.float32)
+                   / math.sqrt(d)).astype(dtype),
+        "w_o": (jax.random.normal(k2, (H * dv, d), jnp.float32)
+                / math.sqrt(H * dv * 2 * cfg.num_layers)).astype(dtype),
+        "rab": init_rab(k3, cfg.rab, H) if cfg.rab else {},
+    }
+    return p
+
+
+def _block_norm(x: jax.Array, w, b, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def hstu_block(p: Params, cfg: ArchConfig, x: jax.Array,
+               offsets: jax.Array, timestamps: jax.Array,
+               *, attn_fn=None, time_mode: str = "bucket") -> jax.Array:
+    """One HSTU block over packed tokens x: (cap, d)."""
+    H = cfg.num_heads
+    dqk = cfg.qkv_dim or cfg.resolved_head_dim
+    dv = dqk
+    cap, d = x.shape
+
+    h = _block_norm(x, p["ln_w"], p["ln_b"], cfg.norm_eps)
+    uvqk = _silu(h @ p["w_uvqk"])
+    u, v, q, k = jnp.split(
+        uvqk, [H * dv, 2 * H * dv, 2 * H * dv + H * dqk], axis=-1)
+    q = q.reshape(cap, H, dqk)
+    k = k.reshape(cap, H, dqk)
+    v = v.reshape(cap, H, dv)
+
+    attn_fn = attn_fn or partial(jagged_pointwise_attention_blocked, block=512)
+    y = attn_fn(q, k, v, offsets, timestamps, p["rab"],
+                cfg.rab, time_mode=time_mode)
+
+    y = y.reshape(cap, H * dv)
+    # non-affine layernorm on the attention output, gated by U (HSTU eq. Y)
+    yf = y.astype(jnp.float32)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.mean((yf - mu) ** 2, axis=-1, keepdims=True)
+    yn = ((yf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)).astype(x.dtype)
+    out = (yn * u) @ p["w_o"]
+    return x + out

@@ -1,0 +1,252 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked matmul form.
+
+Implements the ``ssd_minimal_discrete`` algorithm of arXiv:2405.21060 in JAX:
+within-chunk computation is attention-like (MXU-friendly matmuls), and the
+cross-chunk recurrence is a short ``lax.scan`` over chunk states — the
+TPU-native adaptation (the original CUDA kernel's warp-level scan has no TPU
+analogue; the chunked matmul form is how SSD maps onto a systolic array).
+
+Jagged packing support: ``segment_ids`` resets the recurrence at sequence
+boundaries (decay across a boundary is zeroed), which is how the paper's
+padding-elimination insight transfers to attention-free layers
+(DESIGN.md §5: RAB does not transfer, packing does).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.core.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+def init_mamba(key, cfg: ArchConfig, dtype) -> Params:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nheads = d_in // s.head_dim
+    d_bc = s.n_groups * s.d_state
+    ki, kx, kb, kd, ko, kc, ka, kdt = jax.random.split(key, 8)
+    # Separate z/x/BC/dt projections (vs the fused in_proj of the reference
+    # CUDA code) so each matmul output dim is cleanly tensor-parallel —
+    # sharding a fused [z|x|B|C|dt] column dim would split the segments
+    # unevenly across the `model` axis (DESIGN.md §2 hardware adaptation).
+    p: Params = {
+        "in_z": (jax.random.normal(ki, (d, d_in), jnp.float32)
+                 / math.sqrt(d)).astype(dtype),
+        "in_x": (jax.random.normal(kx, (d, d_in), jnp.float32)
+                 / math.sqrt(d)).astype(dtype),
+        "in_bc": (jax.random.normal(kb, (d, 2 * d_bc), jnp.float32)
+                  / math.sqrt(d)).astype(dtype),
+        "in_dt": (jax.random.normal(kd, (d, nheads), jnp.float32)
+                  / math.sqrt(d)).astype(dtype),
+        "out_proj": (jax.random.normal(ko, (d_in, d), jnp.float32)
+                     / math.sqrt(d_in * 2 * cfg.num_layers)).astype(dtype),
+        "conv_w": (jax.random.normal(kc, (s.conv_width, d_in + 2 * d_bc),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_in + 2 * d_bc,), dtype),
+        # A stored as log(-A): A = -exp(A_log), init in [1, 16]
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads, dtype=jnp.float32)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": (jax.random.uniform(kdt, (nheads,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))),
+        "norm_w": jnp.ones((d_in,), dtype),
+    }
+    return p
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum x[..., j+1:i+1], -inf for j>i."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                seg: Optional[jax.Array] = None,
+                init_state: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan. x:(b,S,H,P) dt:(b,S,H) A:(H,) B/C:(b,S,G,N).
+
+    Returns (y (b,S,H,P), final_state (b,H,P,N)). ``seg`` (b,S) int32 resets
+    state at segment boundaries (jagged packing).
+    """
+    b, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    rep = H // G
+
+    dtA = dt * A[None, None, :]                                  # (b,S,H) ≤0
+    if seg is not None:
+        # zero decay across segment boundaries: where seg[t] != seg[t-1],
+        # make the decay from t-1→t total (dtA[t] → -inf ⇒ exp → 0).
+        boundary = jnp.concatenate(
+            [jnp.zeros((b, 1), bool), seg[:, 1:] != seg[:, :-1]], axis=1)
+        dtA = jnp.where(boundary[..., None], -1e9, dtA)
+
+    # reshape into chunks
+    xc = x.reshape(b, nc, chunk, H, P)
+    dtc = dt.reshape(b, nc, chunk, H)
+    dtAc = dtA.reshape(b, nc, chunk, H)
+    Bc = Bm.reshape(b, nc, chunk, G, N)
+    Cc = Cm.reshape(b, nc, chunk, G, N)
+
+    Bh = jnp.repeat(Bc, rep, axis=3)                             # (b,nc,c,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    Acs = jnp.cumsum(dtAc, axis=2)                               # (b,nc,c,H)
+    # 1. diagonal (within-chunk) term — attention-like
+    Lmat = jnp.exp(_segsum(dtAc.transpose(0, 1, 3, 2)))          # (b,nc,H,c,c)
+    scores = jnp.einsum("bzchn,bzshn->bzhcs", Ch, Bh,
+                        preferred_element_type=jnp.float32)
+    y_diag = jnp.einsum("bzhcs,bzhcs,bzsh,bzshp->bzchp",
+                        scores, Lmat, dtc, xc,
+                        preferred_element_type=jnp.float32)
+
+    # 2. per-chunk output states
+    decay_states = jnp.exp(Acs[:, :, -1:, :] - Acs)              # (b,nc,c,H)
+    states = jnp.einsum("bzchn,bzch,bzch,bzchp->bzhpn",
+                        Bh, decay_states, dtc, xc,
+                        preferred_element_type=jnp.float32)      # (b,nc,H,P,N)
+
+    # 3. cross-chunk recurrence (short scan over nc)
+    chunk_decay = jnp.exp(Acs[:, :, -1, :])                      # (b,nc,H)
+    h0 = (init_state if init_state is not None
+          else jnp.zeros((b, H, P, N), jnp.float32))
+
+    def body(h, inp):
+        st, dec = inp                                            # (b,H,P,N),(b,H)
+        h_out = h                                                # state entering chunk
+        h = h * dec[:, :, None, None] + st
+        return h, h_out
+
+    sc = states.transpose(1, 0, 2, 3, 4)
+    dc = chunk_decay.transpose(1, 0, 2)
+    h_final, h_in = jax.lax.scan(body, h0, (sc, dc))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                         # (b,nc,H,P,N)
+
+    # 4. state → output contribution
+    state_decay = jnp.exp(Acs)                                   # (b,nc,c,H)
+    y_off = jnp.einsum("bzchn,bzch,bzhpn->bzchp",
+                       Ch, state_decay, h_in,
+                       preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(b, S, H, P)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(x, dt, A, Bm, Cm, state):
+    """Single-token recurrent update. x:(b,1,H,P) B/C:(b,1,G,N) state:(b,H,P,N)."""
+    b, _, H, P = x.shape
+    G = Bm.shape[2]
+    rep = H // G
+    Bh = jnp.repeat(Bm[:, 0], rep, axis=1)                       # (b,H,N)
+    Ch = jnp.repeat(Cm[:, 0], rep, axis=1)
+    dtA = jnp.exp(dt[:, 0] * A[None, :])                         # (b,H)
+    upd = jnp.einsum("bhn,bh,bhp->bhpn", Bh, dt[:, 0], x[:, 0],
+                     preferred_element_type=jnp.float32)
+    state = state * dtA[:, :, None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, state,
+                   preferred_element_type=jnp.float32)
+    return y[:, None].astype(x.dtype), state
+
+
+def _causal_conv(h: jax.Array, w: jax.Array, b: jax.Array,
+                 conv_state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d. h: (B,S,C), w: (K,C). Returns (out, new_state)."""
+    K = w.shape[0]
+    if conv_state is not None:                                   # decode: S==1
+        buf = jnp.concatenate([conv_state, h], axis=1)           # (B,K,C)
+        out = jnp.einsum("bkc,kc->bc", buf, w) + b
+        return jax.nn.silu(out)[:, None], buf[:, 1:]
+    pad = jnp.zeros((h.shape[0], K - 1, h.shape[2]), h.dtype)
+    hp = jnp.concatenate([pad, h], axis=1)
+    # stack K shifted views — cheap, K is 4
+    out = sum(hp[:, i:i + h.shape[1]] * w[i] for i in range(K)) + b
+    new_state = hp[:, -(K - 1):] if K > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def mamba_block(p: Params, cfg: ArchConfig, x: jax.Array, *,
+                seg: Optional[jax.Array] = None,
+                state: Optional[Dict[str, jax.Array]] = None):
+    """Full Mamba-2 block. x: (B,S,d). Returns (out, new_state).
+
+    ``state`` = {"ssm": (B,H,P,N), "conv": (B,K-1,Cin)} for decode.
+    """
+    s: SSMConfig = cfg.ssm
+    B, S, d = x.shape
+    d_in = s.expand * d
+    d_bc = s.n_groups * s.d_state
+    H = d_in // s.head_dim
+
+    z = x @ p["in_z"]
+    xbc = jnp.concatenate([x @ p["in_x"], x @ p["in_bc"]], axis=-1)
+    dtr = x @ p["in_dt"]
+    z = constrain(z, "batch", None, "tp")
+    decode = state is not None and S == 1
+    conv_state = state["conv"] if decode else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + d_bc], axis=-1)
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])
+    xh = constrain(xs.reshape(B, S, H, s.head_dim), "batch", None, "tp", None)
+    Bm = Bm.reshape(B, S, s.n_groups, s.d_state).astype(jnp.float32)
+    Cm = Cm.reshape(B, S, s.n_groups, s.d_state).astype(jnp.float32)
+
+    if decode:
+        y, new_ssm = ssd_decode_step(xh, dt, A, Bm, Cm, state["ssm"])
+    else:
+        # prefill/train (state, if given, seeds the recurrence — chunked path)
+        chunk = min(s.chunk, S)
+        pad = (-S) % chunk
+        if pad:
+            # pad to a chunk multiple with dt=0 tokens: decay exp(0)=1 and
+            # contribution dt·x=0, so the final state is untouched.
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            if seg is not None:
+                seg = jnp.pad(seg, ((0, 0), (0, pad)), constant_values=-1)
+        init = state["ssm"] if state is not None else None
+        y, new_ssm = ssd_chunked(xh, dt, A, Bm, Cm, chunk, seg=seg,
+                                 init_state=init)
+        if pad:
+            y = y[:, :S]
+            xh = xh[:, :S]
+        if state is not None and new_conv is None:
+            new_conv = state["conv"]
+
+    in_dtype = x.dtype
+    y = y + xh * p["D"][None, None, :, None].astype(y.dtype)      # skip (D term)
+    y = y.reshape(B, S, d_in)
+    # gated RMSNorm (Mamba-2)
+    y = y * jax.nn.silu(z).astype(y.dtype)
+    y32 = y.astype(jnp.float32)
+    y = (y32 * jax.lax.rsqrt(jnp.mean(y32 * y32, -1, keepdims=True) + 1e-5)
+         * p["norm_w"].astype(jnp.float32)).astype(in_dtype)
+    out = y @ p["out_proj"]
+    new_state = {"ssm": new_ssm, "conv": new_conv} if new_conv is not None else {"ssm": new_ssm}
+    return out, new_state
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    d_bc = s.n_groups * s.d_state
+    return {
+        "ssm": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, d_in + 2 * d_bc), dtype),
+    }

@@ -1,0 +1,87 @@
+"""SASRec block — the paper's Appendix-A baseline model ("we evaluate
+several models, including SASRec, HSTU, and FuXi").
+
+Classic self-attentive sequential recommendation (Kang & McAuley 2018):
+LN → causal softmax attention → residual → LN → pointwise FFN (d→d,
+ReLU) → residual, adapted to the packed jagged layout (same-row causal
+masking) so it drops into the GR substrate unchanged. No RAB — SASRec
+predates relative biases; position information is the caller's absolute
+position embedding (added at the embedding stage).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+Params = Dict[str, Any]
+
+
+def init_sasrec_block(key, cfg: ArchConfig, dtype) -> Params:
+    d, H = cfg.d_model, cfg.num_heads
+    hd = cfg.qkv_dim or (d // H)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "ln1_w": jnp.ones((d,), dtype), "ln1_b": jnp.zeros((d,), dtype),
+        "ln2_w": jnp.ones((d,), dtype), "ln2_b": jnp.zeros((d,), dtype),
+        "w_qkv": (jax.random.normal(k1, (d, 3 * H * hd), jnp.float32)
+                  / math.sqrt(d)).astype(dtype),
+        "w_o": (jax.random.normal(k2, (H * hd, d), jnp.float32)
+                / math.sqrt(H * hd * 2 * cfg.num_layers)).astype(dtype),
+        "ffn_w1": (jax.random.normal(k3, (d, d), jnp.float32)
+                   / math.sqrt(d)).astype(dtype),
+        "ffn_b1": jnp.zeros((d,), dtype),
+        "ffn_w2": (jax.random.normal(k4, (d, d), jnp.float32)
+                   / math.sqrt(d * 2 * cfg.num_layers)).astype(dtype),
+        "ffn_b2": jnp.zeros((d,), dtype),
+    }
+
+
+def _ln(x, w, b, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, -1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+            + b.astype(jnp.float32)).astype(dt)
+
+
+def sasrec_block(p: Params, cfg: ArchConfig, x: jax.Array,
+                 offsets: jax.Array, timestamps: jax.Array,
+                 *, attn_fn=None, time_mode: str = "none") -> jax.Array:
+    """One SASRec block over packed tokens x: (cap, d). ``timestamps`` are
+    accepted (substrate signature) but unused — SASRec is time-agnostic."""
+    cap, d = x.shape
+    H = cfg.num_heads
+    hd = cfg.qkv_dim or (d // H)
+
+    h = _ln(x, p["ln1_w"], p["ln1_b"], cfg.norm_eps)
+    qkv = h @ p["w_qkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(cap, H, hd)
+    k = k.reshape(cap, H, hd)
+    v = v.reshape(cap, H, hd)
+
+    slot = jnp.arange(cap, dtype=jnp.int32)
+    total = offsets[-1]
+    seg = jnp.searchsorted(offsets, slot, side="right") - 1
+    seg = jnp.where(slot < total, seg, -1)
+    mask = (seg[:, None] == seg[None, :]) & (seg[:, None] >= 0)
+    mask &= slot[:, None] >= slot[None, :]
+
+    s = jnp.einsum("qhd,khd->qkh", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    s = jnp.where(mask[..., None], s, -jnp.inf)
+    a = jax.nn.softmax(s, axis=1)
+    a = jnp.where(jnp.isnan(a), 0.0, a)        # rows with no valid keys
+    y = jnp.einsum("qkh,khd->qhd", a.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    x = x + y.reshape(cap, H * hd) @ p["w_o"]
+
+    h = _ln(x, p["ln2_w"], p["ln2_b"], cfg.norm_eps)
+    ff = jax.nn.relu(h @ p["ffn_w1"] + p["ffn_b1"]) @ p["ffn_w2"] + p["ffn_b2"]
+    return x + ff

@@ -1,0 +1,374 @@
+"""Generic decoder stack for the 10 assigned architectures.
+
+Layers are grouped into a minimal repeating *period* (dense: 1 layer;
+jamba: 8 layers — 1 attention + 7 mamba, MoE every 2) and the stack is a
+``lax.scan`` over periods with per-period parameters stacked on a leading
+axis — HLO size stays O(period), which is what lets the 72-layer / 398B
+configs compile in the dry-run.
+
+Three entry points (matching the assigned input-shape kinds):
+  * :func:`lm_loss`        — train_*: causal-LM loss over (tokens|embeds, labels)
+  * :func:`lm_prefill`     — prefill_*: full forward, fills the decode cache
+  * :func:`lm_decode_step` — decode_* / long_*: one token against a cache
+
+Sharding is expressed through ``core.sharding.constrain`` logical axes:
+  batch → DP axes, sp → sequence (Megatron-SP) axis, tp → tensor-parallel
+  axis, vocab/expert → tp. No-ops on a single device.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.sharding import constrain
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as E
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# period structure
+# --------------------------------------------------------------------------
+
+def layer_signature(cfg: ArchConfig, i: int) -> Tuple[str, bool]:
+    return (cfg.layer_kinds()[i], cfg.moe_layer(i))
+
+
+def period_len(cfg: ArchConfig) -> int:
+    """Smallest p such that layer signatures repeat with period p."""
+    sigs = [layer_signature(cfg, i) for i in range(cfg.num_layers)]
+    for p in range(1, cfg.num_layers + 1):
+        if cfg.num_layers % p:
+            continue
+        if all(sigs[i] == sigs[i % p] for i in range(cfg.num_layers)):
+            return p
+    return cfg.num_layers
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_slot(key, cfg: ArchConfig, sig: Tuple[str, bool], dtype) -> Params:
+    kind, is_moe = sig
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {"norm1_w": jnp.ones((cfg.d_model,), dtype)}
+    if kind == "attn":
+        p["attn"] = L.init_attention(k1, cfg, dtype)
+    else:
+        p["ssm"] = M.init_mamba(k1, cfg, dtype)
+    if is_moe:
+        p["norm2_w"] = jnp.ones((cfg.d_model,), dtype)
+        p["moe"] = E.init_moe(k2, cfg, dtype)
+    elif cfg.d_ff:
+        p["norm2_w"] = jnp.ones((cfg.d_model,), dtype)
+        p["mlp"] = L.init_mlp(k3, cfg, cfg.d_ff, dtype)
+    return p
+
+
+def init_lm(key, cfg: ArchConfig, dtype=None) -> Params:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    p_len = period_len(cfg)
+    n_periods = cfg.num_layers // p_len
+    ke, kh, kl = jax.random.split(key, 3)
+    params: Params = {
+        "embed": L.embed_init(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm_w": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(kh, cfg.d_model, cfg.vocab_size, dtype)
+
+    slot_keys = jax.random.split(kl, p_len)
+    slots = []
+    for s in range(p_len):
+        sig = layer_signature(cfg, s)
+        pkeys = jax.random.split(slot_keys[s], n_periods)
+        slot_p = jax.vmap(lambda k: _init_slot(k, cfg, sig, dtype))(pkeys)
+        slots.append(slot_p)
+    params["slots"] = slots
+    return params
+
+
+# --------------------------------------------------------------------------
+# one period of blocks
+# --------------------------------------------------------------------------
+
+def _attn_block(sp: Params, cfg: ArchConfig, x, positions, lengths,
+                q_block: int, cache=None, cache_index=None):
+    h = L.rmsnorm(x, sp["norm1_w"], cfg.norm_eps)
+    h = constrain(h, "batch", "act_sp", None)
+    out, new_cache = L.attention(sp["attn"], cfg, h, positions,
+                                 lengths=lengths, q_block=q_block,
+                                 kv_cache=cache, cache_index=cache_index)
+    out = constrain(out, "batch", "act_sp", None)
+    return x + out, new_cache
+
+
+def _ssm_block(sp: Params, cfg: ArchConfig, x, seg, state=None):
+    h = L.rmsnorm(x, sp["norm1_w"], cfg.norm_eps)
+    h = constrain(h, "batch", "act_sp", None)
+    out, new_state = M.mamba_block(sp["ssm"], cfg, h, seg=seg, state=state)
+    out = constrain(out, "batch", "act_sp", None)
+    return x + out, new_state
+
+
+def _ffn_block(sp: Params, cfg: ArchConfig, x):
+    """Returns (x, aux_loss)."""
+    if "moe" in sp:
+        h = L.rmsnorm(x, sp["norm2_w"], cfg.norm_eps)
+        out, aux = E.moe_apply(sp["moe"], cfg, h)
+        out = constrain(out, "batch", "act_sp", None)
+        return x + out, aux
+    if "mlp" in sp:
+        h = L.rmsnorm(x, sp["norm2_w"], cfg.norm_eps)
+        h = constrain(h, "batch", "act_sp", None)
+        out = L.mlp(sp["mlp"], cfg, h)
+        out = constrain(out, "batch", "act_sp", None)
+        return x + out, jnp.float32(0.0)
+    return x, jnp.float32(0.0)
+
+
+# --------------------------------------------------------------------------
+# decode cache
+# --------------------------------------------------------------------------
+
+class DecodeCache(NamedTuple):
+    """Per period-slot caches, stacked over periods on the leading axis."""
+    kv: Dict[int, Tuple[jax.Array, jax.Array]]   # slot -> (K, V): (Np,B,S,Hkv,hd)
+    ssm: Dict[int, Dict[str, jax.Array]]         # slot -> {"ssm","conv"}: (Np,...)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=None) -> DecodeCache:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    p_len = period_len(cfg)
+    n_p = cfg.num_layers // p_len
+    hd = cfg.resolved_head_dim
+    kv: Dict[int, Tuple[jax.Array, jax.Array]] = {}
+    ssm: Dict[int, Dict[str, jax.Array]] = {}
+    for s in range(p_len):
+        kind, _ = layer_signature(cfg, s)
+        if kind == "attn":
+            shp = (n_p, batch, max_len, cfg.num_kv_heads, hd)
+            kv[s] = (jnp.zeros(shp, dtype), jnp.zeros(shp, dtype))
+        else:
+            st = M.init_mamba_state(cfg, batch, dtype)
+            ssm[s] = {k: jnp.broadcast_to(v, (n_p, *v.shape)).astype(v.dtype)
+                      for k, v in st.items()}
+    return DecodeCache(kv=kv, ssm=ssm)
+
+
+# --------------------------------------------------------------------------
+# forward core: scan over periods
+# --------------------------------------------------------------------------
+
+def _period_body(cfg: ArchConfig, p_len: int, x, slot_params, positions,
+                 lengths, seg, q_block, caches=None, cache_index=None,
+                 remat: bool = True):
+    """Apply one period (p_len layers). caches: per-slot cache slice or None.
+    Returns (x, aux, new_caches)."""
+    aux = jnp.float32(0.0)
+    new_caches: Dict[int, Any] = {}
+
+    def body(x):
+        a = jnp.float32(0.0)
+        ncs: Dict[int, Any] = {}
+        for s in range(p_len):
+            sp = slot_params[s]
+            kind, _ = layer_signature(cfg, s)
+            if kind == "attn":
+                c = caches.kv.get(s) if caches is not None else None
+                x2, nc = _attn_block(sp, cfg, x, positions, lengths, q_block,
+                                     cache=c, cache_index=cache_index)
+            else:
+                st = caches.ssm.get(s) if caches is not None else None
+                x2, nc = _ssm_block(sp, cfg, x, seg, state=st)
+            x2, a_s = _ffn_block(sp, cfg, x2)
+            x = constrain(x2, "batch", "act_sp", None)
+            a = a + a_s
+            if nc is not None:
+                ncs[s] = nc
+        return x, a, ncs
+
+    if remat and caches is None:
+        x, aux, new_caches = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)(x)
+    else:
+        x, aux, new_caches = body(x)
+    return x, aux, new_caches
+
+
+def lm_hidden(params: Params, cfg: ArchConfig, x: jax.Array,
+              positions: jax.Array, *, lengths=None, seg=None,
+              q_block: int = 1024, remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Stack forward (no cache). x: (B,S,d). Returns (hidden, aux_loss)."""
+    p_len = period_len(cfg)
+
+    def step(carry, slot_params):
+        x, aux = carry
+        x, a, _ = _period_body(cfg, p_len, x, slot_params, positions,
+                               lengths, seg, q_block, remat=remat)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.float32(0.0)), params["slots"])
+    x = L.rmsnorm(x, params["final_norm_w"], cfg.norm_eps)
+    return constrain(x, "batch", "act_sp", None), aux
+
+
+def _embed_tokens(params: Params, cfg: ArchConfig, tokens: jax.Array):
+    emb = constrain(params["embed"], "vocab", None)
+    x = jnp.take(emb, tokens, axis=0)
+    return constrain(x, "batch", "act_sp", None)
+
+
+def lm_logits(params: Params, cfg: ArchConfig, hidden: jax.Array) -> jax.Array:
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    head = constrain(head, None, "vocab")
+    logits = hidden @ head
+    return constrain(logits, "batch", None, "vocab")
+
+
+# --------------------------------------------------------------------------
+# losses / steps
+# --------------------------------------------------------------------------
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 valid: Optional[jax.Array] = None) -> jax.Array:
+    """Mean CE over valid positions. logits (..., V) may be vocab-sharded —
+    the reductions below become psum-style collectives under SPMD."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # one-hot contraction instead of take_along_axis: stays vocab-sharded
+    # under SPMD (the gather would force an all-gather of the logits).
+    onehot = constrain(jax.nn.one_hot(labels, logits.shape[-1],
+                                      dtype=logits.dtype),
+                       "batch", None, "vocab")
+    tgt = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - tgt
+    if valid is not None:
+        nll = nll * valid
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1.0)
+    return jnp.mean(nll)
+
+
+def lm_loss(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            *, q_block: int = 1024, remat: bool = True) -> jax.Array:
+    """Causal-LM loss. batch: {tokens|embeds, labels[, lengths]}."""
+    if cfg.frontend == "stub_embed":
+        x = constrain(batch["embeds"].astype(jnp.dtype(cfg.dtype)),
+                      "batch", "act_sp", None)
+        B, S = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = _embed_tokens(params, cfg, tokens)
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    lengths = batch.get("lengths")
+    hidden, aux = lm_hidden(params, cfg, x, positions, lengths=lengths,
+                            q_block=q_block, remat=remat)
+    logits = lm_logits(params, cfg, hidden)
+    valid = None
+    if lengths is not None:
+        valid = (jnp.arange(S)[None, :] < lengths[:, None]).astype(jnp.float32)
+    loss = softmax_xent(logits, batch["labels"], valid)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_loss_coef * aux
+    return loss
+
+
+def lm_loss_microbatched(params: Params, cfg: ArchConfig,
+                         batch: Dict[str, jax.Array], num_microbatches: int,
+                         *, q_block: int = 1024, remat: bool = True) -> jax.Array:
+    """Loss averaged over microbatches via lax.scan (gradient accumulation
+    happens through the scan's linearization — activation memory is one
+    microbatch)."""
+    if num_microbatches <= 1:
+        return lm_loss(params, cfg, batch, q_block=q_block, remat=remat)
+    B = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    assert B % num_microbatches == 0, (B, num_microbatches)
+    mb = B // num_microbatches
+    stacked = jax.tree.map(
+        lambda a: a.reshape(num_microbatches, mb, *a.shape[1:]), batch)
+
+    def step(acc, mbatch):
+        return acc + lm_loss(params, cfg, mbatch, q_block=q_block,
+                             remat=remat), None
+
+    total, _ = jax.lax.scan(step, jnp.float32(0.0), stacked)
+    return total / num_microbatches
+
+
+def lm_prefill(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+               *, q_block: int = 1024,
+               max_len: Optional[int] = None) -> Tuple[jax.Array, DecodeCache]:
+    """Prefill: full forward filling a decode cache; returns last-position
+    logits + cache. batch: {tokens|embeds[, lengths]}. ``max_len`` sizes
+    the cache for subsequent decode steps (default: prompt length)."""
+    if cfg.frontend == "stub_embed":
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+        B, S = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = _embed_tokens(params, cfg, tokens)
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    lengths = batch.get("lengths")
+    cache = init_cache(cfg, B, max_len or S)
+    p_len = period_len(cfg)
+
+    def step(carry, inp):
+        x = carry
+        slot_params, cache_slice = inp
+        x, _, ncs = _period_body(cfg, p_len, x, slot_params, positions,
+                                 lengths, None, q_block,
+                                 caches=cache_slice, cache_index=jnp.int32(0),
+                                 remat=False)
+        new_slice = DecodeCache(
+            kv={s: ncs[s] for s in cache_slice.kv},
+            ssm={s: ncs[s] for s in cache_slice.ssm})
+        return x, new_slice
+
+    x, new_cache = jax.lax.scan(step, x, (params["slots"], cache))
+    x = L.rmsnorm(x, params["final_norm_w"], cfg.norm_eps)
+    logits = lm_logits(params, cfg, x[:, -1:, :])
+    return logits, new_cache
+
+
+def lm_decode_step(params: Params, cfg: ArchConfig,
+                   token: jax.Array, cache: DecodeCache,
+                   cache_index: jax.Array,
+                   *, embeds: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, DecodeCache]:
+    """One decode step. token: (B,1) int32 (or embeds (B,1,d) for stub
+    frontends). Returns (logits (B,1,V), updated cache)."""
+    if cfg.frontend == "stub_embed":
+        x = embeds.astype(jnp.dtype(cfg.dtype))
+        B = x.shape[0]
+    else:
+        B = token.shape[0]
+        x = _embed_tokens(params, cfg, token)
+    positions = jnp.broadcast_to(cache_index[None, None], (B, 1)).astype(jnp.int32)
+    p_len = period_len(cfg)
+
+    def step(x, inp):
+        slot_params, cache_slice = inp
+        x, _, ncs = _period_body(cfg, p_len, x, slot_params, positions,
+                                 None, None, 1,
+                                 caches=cache_slice, cache_index=cache_index,
+                                 remat=False)
+        new_slice = DecodeCache(
+            kv={s: ncs[s] for s in cache_slice.kv},
+            ssm={s: ncs[s] for s in cache_slice.ssm})
+        return x, new_slice
+
+    x, new_cache = jax.lax.scan(step, x, (params["slots"], cache))
+    x = L.rmsnorm(x, params["final_norm_w"], cfg.norm_eps)
+    logits = lm_logits(params, cfg, x)
+    return logits, new_cache

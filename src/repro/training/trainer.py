@@ -1,0 +1,141 @@
+"""Train-step builders.
+
+* :func:`make_lm_train_step` — the step the multi-pod dry-run lowers for
+  the 10 assigned LM architectures: gradient accumulation over
+  microbatches (scan-of-grads, so activation memory is one microbatch) +
+  AdamW. Grad-accumulation dtype and optimizer-moment dtype come from the
+  partition plan (398B uses bf16 for both).
+
+* :func:`make_gr_train_step` — the paper's training step: sparse lookup
+  (HSP sparse-exchange or dense baseline), jagged dense model, sampled-
+  softmax recall loss (§4.3 modes), AdamW on dense params, Eq.-1 AdaGrad
+  on the table, optionally τ=1 semi-async sparse updates (§4.2.2).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import semi_async as SA
+from repro.training import optim as O
+
+Params = Any
+Batch = Dict[str, jax.Array]
+
+
+# --------------------------------------------------------------------------
+# LM trainer
+# --------------------------------------------------------------------------
+
+class LMTrainState(NamedTuple):
+    params: Params
+    opt: O.AdamWState
+    step: jax.Array
+
+
+def lm_train_state(params: Params, opt_dtype=jnp.float32) -> LMTrainState:
+    return LMTrainState(params=params, opt=O.adamw_init(params, opt_dtype),
+                        step=jnp.zeros((), jnp.int32))
+
+
+def make_lm_train_step(loss_fn: Callable[[Params, Batch], jax.Array], *,
+                       num_microbatches: int = 1,
+                       accum_dtype=jnp.float32,
+                       lr: float = 3e-4, weight_decay: float = 0.1,
+                       b1: float = 0.9, b2: float = 0.95):
+    """loss_fn(params, microbatch) → scalar. Returns train_step."""
+
+    def train_step(state: LMTrainState, batch: Batch):
+        params = state.params
+
+        if num_microbatches <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            B = jax.tree_util.tree_leaves(batch)[0].shape[0]
+            assert B % num_microbatches == 0, (B, num_microbatches)
+            mb = B // num_microbatches
+            stacked = jax.tree.map(
+                lambda a: a.reshape(num_microbatches, mb, *a.shape[1:]),
+                batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+
+            def mb_step(carry, mbatch):
+                g_acc, l_acc = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), g_acc, g)
+                return (g_acc, l_acc + loss), None
+
+            (grads, loss), _ = jax.lax.scan(
+                mb_step, (zero, jnp.float32(0.0)), stacked)
+            inv = 1.0 / num_microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss = loss * inv
+
+        new_params, new_opt = O.adamw_update(
+            grads, state.opt, params, lr=lr, b1=b1, b2=b2,
+            weight_decay=weight_decay)
+        return (LMTrainState(new_params, new_opt, state.step + 1),
+                {"loss": loss})
+
+    return train_step
+
+
+# --------------------------------------------------------------------------
+# GR trainer (the paper's system)
+# --------------------------------------------------------------------------
+
+class GRTrainState(NamedTuple):
+    dense: Params
+    dense_opt: O.AdamWState
+    table: jax.Array
+    table_accum: jax.Array          # AdaGrad S (Eq. 1)
+    pending_grad: jax.Array         # τ=1 delayed sparse grad (§4.2.2)
+    step: jax.Array
+
+
+def gr_train_state(dense: Params, table: jax.Array,
+                   opt_dtype=jnp.float32) -> GRTrainState:
+    return GRTrainState(
+        dense=dense, dense_opt=O.adamw_init(dense, opt_dtype),
+        table=table,
+        table_accum=jnp.zeros_like(table, jnp.float32),
+        pending_grad=jnp.zeros_like(table, jnp.float32),
+        step=jnp.zeros((), jnp.int32))
+
+
+def make_gr_train_step(loss_fn: Callable[[Params, jax.Array, Batch],
+                                         jax.Array], *,
+                       lr_dense: float = 4e-3, lr_sparse: float = 4e-3,
+                       semi_async: bool = True):
+    """loss_fn(dense_params, table, batch) → scalar (built from
+    GRBundle.loss with the lookup/neg-sampling modes already bound)."""
+
+    def train_step(state: GRTrainState, batch: Batch):
+        (loss, _), (gd, gt) = jax.value_and_grad(
+            lambda d, t: (loss_fn(d, t, batch), 0.0),
+            argnums=(0, 1), has_aux=True)(state.dense, state.table)
+
+        new_dense, new_opt = O.adamw_update(
+            gd, state.dense_opt, state.dense, lr=lr_dense, weight_decay=0.0)
+
+        gt = gt.astype(jnp.float32)
+        if semi_async:
+            # apply last step's sparse grad; stash this one (τ = 1)
+            apply_g, pending = state.pending_grad, gt
+        else:
+            apply_g, pending = gt, jnp.zeros_like(gt)
+        accum = state.table_accum + apply_g * apply_g
+        new_table = (state.table - lr_sparse * apply_g
+                     * jax.lax.rsqrt(accum + 1e-10)).astype(state.table.dtype)
+
+        return (GRTrainState(new_dense, new_opt, new_table, accum,
+                             pending, state.step + 1),
+                {"loss": loss})
+
+    return train_step

@@ -1,0 +1,73 @@
+"""Trip-count-aware HLO analyzer: synthetic-text units + a real compile."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import (Analyzer, analyze_text, parse_module,
+                                       _split_instr)
+from repro.launch.roofline import collective_bytes
+
+
+def test_split_instr_tuple_with_index_comments():
+    line = ('  %while.266 = (s32[], bf16[4,4,1024]{2,1,0}, '
+            '/*index=5*/f32[4,2,128]{2,1,0}) while(%tuple.235), '
+            'condition=%c, body=%b, backend_config='
+            '{"known_trip_count":{"n":"4"}}')
+    name, type_str, opcode, rest = _split_instr(line)
+    assert name == "while.266" and opcode == "while"
+    assert "known_trip_count" in rest
+
+
+def test_analyze_synthetic_module():
+    txt = """HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %d = f32[8,8] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ip, %d)
+}
+
+%cond (p2: (s32[], f32[8,8])) -> pred[] {
+  %p2 = (s32[], f32[8,8]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8] parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%zero, %a)
+  %w = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body
+  %ag = f32[16,8] all-gather(%a), replica_groups={{0,1}}, dimensions={0}
+  ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+    c = analyze_text(txt)
+    assert c.flops == 5 * 2 * 8 * 8 * 8           # 5 trips x dot(8x8x8)
+    assert c.coll_bytes["all-gather"] == 8 * 8 * 4  # operand size
+
+
+def test_collective_parse_on_real_compile():
+    def f(x):
+        return x.sum()
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((128,), jnp.float32)).compile()
+    c = analyze_text(compiled.as_text())
+    assert c.flops >= 0 and sum(c.coll_bytes.values()) == 0
+
+
+def test_trip_count_on_real_scan():
+    def f(x):
+        def body(c, _):
+            return c @ c, ()
+        c, _ = jax.lax.scan(body, x, None, length=7)
+        return c
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((16, 16), jnp.float32)).compile()
+    c = analyze_text(compiled.as_text())
+    np.testing.assert_allclose(c.flops, 7 * 2 * 16 ** 3, rtol=0.01)

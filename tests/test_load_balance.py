@@ -1,0 +1,67 @@
+"""§4.1.3 load balancing — Table 3 properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import load_balance as LB
+
+lens_strategy = st.lists(st.integers(1, 2048), min_size=8, max_size=64)
+
+
+def _check_partition(assign, n):
+    got = sorted(i for a in assign for i in a)
+    assert got == list(range(n)), "every sample assigned exactly once"
+
+
+@settings(max_examples=30, deadline=None)
+@given(lengths=lens_strategy, workers=st.integers(2, 8))
+def test_lpt_partition_and_bound(lengths, workers):
+    a = LB.global_token_reallocation(lengths, workers)
+    _check_partition(a, len(lengths))
+    loads = [sum(lengths[i] for i in w) for w in a]
+    # LPT guarantee: makespan <= mean + max item
+    assert max(loads) <= int(np.ceil(np.mean(loads))) + max(lengths)
+
+
+@settings(max_examples=30, deadline=None)
+@given(lengths=lens_strategy, workers=st.integers(2, 8))
+def test_token_aware_partition(lengths, workers):
+    budget = int(np.ceil(sum(lengths) / workers))
+    a = LB.token_aware_batches(lengths, workers, budget)
+    _check_partition(a, len(lengths))
+    # no device except the tail absorber exceeds budget by more than one
+    # sample (the last worker takes the stream remainder by construction)
+    for w in a[:-1]:
+        load = sum(lengths[i] for i in w)
+        if len(w) > 1:
+            assert load - max(lengths[i] for i in w) < budget
+
+
+def test_reallocation_beats_fixed_on_longtail():
+    rng = np.random.default_rng(0)
+    lengths = np.minimum(rng.lognormal(5.0, 1.2, 256).astype(int) + 1, 4096)
+    fixed = LB.fixed_batches(lengths, 16, 16)
+    real = LB.global_token_reallocation(lengths, 16)
+    d_fixed = LB.max_token_diff(fixed, lengths)
+    d_real = LB.max_token_diff(real, lengths)
+    assert d_real < d_fixed / 5, (d_fixed, d_real)      # paper: 10726 -> 559
+    assert (LB.imbalance_ratio(real, lengths)
+            < LB.imbalance_ratio(fixed, lengths))
+
+
+def test_sample_count_weighted_gradient_identity():
+    """Σ (n_i/Σn)·mean_i(g) == global mean gradient — the §4.1.3 weighted
+    aggregation that keeps dynamic batch sizes optimization-equivalent."""
+    rng = np.random.default_rng(1)
+    grads = [rng.normal(size=(n, 4)) for n in (3, 7, 2, 8)]
+    assign = [list(range(n)) for n in (3, 7, 2, 8)]     # counts only
+    w = LB.sample_count_weights(assign)
+    weighted = sum(wi * g.mean(0) for wi, g in zip(w, grads))
+    glob = np.concatenate(grads, 0).mean(0)
+    np.testing.assert_allclose(weighted, glob, rtol=1e-12)
+
+
+def test_empty_and_degenerate():
+    assert LB.global_token_reallocation([5], 4)[0] == [0]
+    a = LB.token_aware_batches([1, 1, 1], 8, 10)
+    _check_partition(a, 3)

@@ -1,0 +1,242 @@
+"""Per-arch smoke tests (deliverable f): every assigned architecture at a
+reduced config of the same family — one forward/train step on CPU, output
+shapes asserted, no NaNs. Plus model-level consistency checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED, GR_CONFIGS, reduced
+from repro.configs.base import count_params
+from repro.models.model_zoo import get_bundle
+
+ALL_LM = sorted(ASSIGNED)
+ALL_GR = ["hstu-tiny", "fuxi-tiny"]
+
+
+def _lm_batch(cfg, key, B=2, S=64):
+    batch = {"labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.frontend == "stub_embed":
+        batch["embeds"] = jax.random.normal(
+            key, (B, S, cfg.d_model), jnp.float32).astype(cfg.dtype)
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("name", ALL_LM)
+def test_lm_smoke_forward_and_grad(name):
+    cfg = reduced(ARCHS[name])
+    b = get_bundle(cfg)
+    key = jax.random.PRNGKey(0)
+    params = b.init(key)
+    batch = _lm_batch(cfg, key)
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: b.loss(p, batch, q_block=32)))(params)
+    assert np.isfinite(float(loss)), name
+    gn = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+             for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0, name
+
+
+@pytest.mark.parametrize("name", ["glm4-9b", "mamba2-2.7b",
+                                  "jamba-1.5-large-398b", "musicgen-large"])
+def test_prefill_decode_consistency(name):
+    """decode(prefill(x)) logits == prefill(x + token) last logits."""
+    cfg = reduced(ARCHS[name])
+    if cfg.moe is not None:
+        # capacity drops route differently between a T=33 dispatch and a
+        # T=1 decode dispatch — disable drops for the equivalence check
+        import dataclasses
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                  capacity_factor=8.0))
+    # fp32 params: chunked-scan vs stepwise-recurrence SSM paths are
+    # bitwise-different roundings; fp32 isolates logic from bf16 noise
+    cfg = cfg.replace(dtype="float32")
+    b = get_bundle(cfg)
+    key = jax.random.PRNGKey(1)
+    params = b.init(key)
+    B, S = 2, 32
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    if cfg.frontend == "stub_embed":
+        emb = jax.random.normal(key, (B, S + 1, cfg.d_model),
+                                jnp.float32).astype(cfg.dtype)
+        logits_full, _ = b.prefill(params, {"embeds": emb}, q_block=16)
+        _, cache = b.prefill(params, {"embeds": emb[:, :S]}, q_block=16,
+                             max_len=S + 1)
+        logits_step, _ = b.decode(params, toks[:, S:S + 1], cache,
+                                  jnp.int32(S), embeds=emb[:, S:S + 1])
+    else:
+        logits_full, _ = b.prefill(params, {"tokens": toks}, q_block=16)
+        _, cache = b.prefill(params, {"tokens": toks[:, :S]}, q_block=16,
+                             max_len=S + 1)
+        logits_step, _ = b.decode(params, toks[:, S:S + 1], cache,
+                                  jnp.int32(S))
+    lf = np.asarray(logits_full[:, -1].astype(jnp.float32))
+    ls = np.asarray(logits_step[:, -1].astype(jnp.float32))
+    np.testing.assert_allclose(ls, lf, rtol=1e-4, atol=1e-4)
+    assert (np.argmax(ls, -1) == np.argmax(lf, -1)).all()
+
+
+@pytest.mark.parametrize("name", ALL_GR)
+def test_gr_smoke_and_neg_mode_equivalence(name):
+    cfg = reduced(ARCHS[name]).replace(num_negatives=8)
+    b = get_bundle(cfg)
+    key = jax.random.PRNGKey(0)
+    dense = b.init_dense(key)
+    table = b.init_table(key)
+    G, cap, R = 2, 128, 8
+    lens = np.asarray([[50, 30], [70, 20]], np.int32)
+    offsets = np.concatenate([np.zeros((2, 1), np.int32),
+                              np.cumsum(lens, 1)], 1)
+    batch = {
+        "ids": jax.random.randint(key, (G, cap), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (G, cap), 0, cfg.vocab_size),
+        "timestamps": jnp.cumsum(
+            jax.random.randint(key, (G, cap), 0, 900), 1).astype(jnp.int32),
+        "offsets": jnp.asarray(offsets),
+        "neg_ids": jax.random.randint(key, (G, cap, R), 0, cfg.vocab_size),
+        "rng": jnp.zeros((2,), jnp.uint32),
+    }
+    base = b.loss(dense, table, batch, neg_mode="baseline")
+    seg = b.loss(dense, table, batch, neg_mode="segmented", neg_segment=32,
+                 fetch_dtype=jnp.float32)
+    assert np.isfinite(float(base))
+    np.testing.assert_allclose(float(base), float(seg), rtol=1e-5)
+    # logit sharing expands the negative set -> loss strictly increases
+    shared = b.loss(dense, table, batch, neg_mode="segmented",
+                    neg_segment=32, expansion=2)
+    assert float(shared) > float(seg)
+
+
+def test_gr_kernel_attention_matches_xla_path():
+    """The Pallas jagged attention drops into the HSTU model unchanged."""
+    from repro.kernels.jagged_attention import make_attn_fn
+    cfg = reduced(ARCHS["hstu-tiny"]).replace(num_negatives=4)
+    b = get_bundle(cfg)
+    key = jax.random.PRNGKey(2)
+    dense = b.init_dense(key)
+    table = b.init_table(key)
+    G, cap = 1, 128
+    offsets = jnp.asarray([[0, 60, 100]], jnp.int32)
+    batch = {
+        "ids": jax.random.randint(key, (G, cap), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (G, cap), 0, cfg.vocab_size),
+        "timestamps": jnp.cumsum(
+            jax.random.randint(key, (G, cap), 0, 900), 1).astype(jnp.int32),
+        "offsets": offsets,
+        "neg_ids": jax.random.randint(key, (G, cap, 4), 0, cfg.vocab_size),
+        "rng": jnp.zeros((2,), jnp.uint32),
+    }
+    l_xla = b.loss(dense, table, batch, neg_mode="baseline")
+    l_ker = b.loss(dense, table, batch, neg_mode="baseline",
+                   attn_fn=make_attn_fn(block=64, interpret=True))
+    np.testing.assert_allclose(float(l_xla), float(l_ker), rtol=2e-3)
+
+
+def test_fuxi_param_count_matches_table1():
+    """FuXi dense param targets (paper Table 1): 0.41/3.18/25.22/201.55M."""
+    targets = {"fuxi-tiny": 0.41e6, "fuxi-small": 3.18e6,
+               "fuxi-medium": 25.22e6, "fuxi-large": 201.55e6}
+    from repro.models.gr import init_gr
+    for name, want in targets.items():
+        cfg = ARCHS[name]
+        params = jax.eval_shape(
+            lambda c=cfg: init_gr(jax.random.PRNGKey(0), c))
+        n = sum(np.prod(l.shape) for l in jax.tree.leaves(params))
+        assert abs(n - want) / want < 0.06, (name, n, want)
+
+
+def test_hstu_param_count_matches_table1():
+    targets = {"hstu-tiny": 0.17e6, "hstu-small": 1.33e6,
+               "hstu-medium": 10.52e6, "hstu-large": 83.97e6}
+    from repro.models.gr import init_gr
+    for name, want in targets.items():
+        cfg = ARCHS[name]
+        params = jax.eval_shape(
+            lambda c=cfg: init_gr(jax.random.PRNGKey(0), c))
+        n = sum(np.prod(l.shape) for l in jax.tree.leaves(params))
+        assert abs(n - want) / want < 0.06, (name, n, want)
+
+
+def test_jagged_packing_equals_padded_forward():
+    """HSTU over a packed 2-row batch == two independent padded rows —
+    the padding-elimination invariant of §4.1.1."""
+    from repro.models.hstu import hstu_block, init_hstu_block
+    cfg = reduced(ARCHS["hstu-tiny"])
+    key = jax.random.PRNGKey(3)
+    p = init_hstu_block(key, cfg, jnp.float32)
+    d = cfg.d_model
+    n1, n2 = 40, 24
+    x1 = jax.random.normal(jax.random.PRNGKey(4), (n1, d), jnp.float32)
+    x2 = jax.random.normal(jax.random.PRNGKey(5), (n2, d), jnp.float32)
+    ts1 = jnp.cumsum(jnp.ones(n1, jnp.int32) * 60)
+    ts2 = jnp.cumsum(jnp.ones(n2, jnp.int32) * 60)
+    # packed
+    cap = 128
+    xp = jnp.zeros((cap, d)).at[:n1].set(x1).at[n1:n1 + n2].set(x2)
+    tsp = jnp.zeros((cap,), jnp.int32).at[:n1].set(ts1).at[n1:n1 + n2].set(ts2)
+    off = jnp.asarray([0, n1, n1 + n2], jnp.int32)
+    packed = hstu_block(p, cfg, xp, off, tsp)
+    # each row alone
+    o1 = hstu_block(p, cfg, x1, jnp.asarray([0, n1], jnp.int32), ts1)
+    o2 = hstu_block(p, cfg, x2, jnp.asarray([0, n2], jnp.int32), ts2)
+    np.testing.assert_allclose(np.asarray(packed[:n1]), np.asarray(o1),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(packed[n1:n1 + n2]),
+                               np.asarray(o2), rtol=2e-4, atol=2e-4)
+
+
+def test_bf16_score_pipeline_loss_parity():
+    """§Perf H4/H5: the bf16 score-pipeline option must track fp32 losses
+    (softmax-free attention has no exp blow-up to amplify rounding)."""
+    from functools import partial
+    from repro.models.hstu import jagged_pointwise_attention_blocked
+    cfg = reduced(ARCHS["hstu-tiny"]).replace(num_negatives=8)
+    b = get_bundle(cfg)
+    key = jax.random.PRNGKey(0)
+    dense = b.init_dense(key)
+    table = b.init_table(key)
+    G, cap = 2, 128
+    batch = {
+        "ids": jax.random.randint(key, (G, cap), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (G, cap), 0, cfg.vocab_size),
+        "timestamps": jnp.cumsum(
+            jax.random.randint(key, (G, cap), 0, 900), 1).astype(jnp.int32),
+        "offsets": jnp.asarray([[0, 64, 128], [0, 100, 120]], jnp.int32),
+        "neg_ids": jax.random.randint(key, (G, cap, 8), 0, cfg.vocab_size),
+        "rng": jnp.zeros((2,), jnp.uint32),
+    }
+    losses = {}
+    for name, dt in (("fp32", jnp.float32), ("bf16", jnp.bfloat16)):
+        attn = partial(jagged_pointwise_attention_blocked, block=64,
+                       score_dtype=dt)
+        losses[name] = float(b.loss(dense, table, batch, attn_fn=attn))
+    gap = abs(losses["bf16"] - losses["fp32"]) / losses["fp32"]
+    assert gap < 0.02, losses
+
+
+def test_sasrec_baseline_smoke():
+    """SASRec (paper Appendix A baseline) runs through the GR substrate."""
+    cfg = reduced(ARCHS["sasrec-tiny"]).replace(num_negatives=8)
+    b = get_bundle(cfg)
+    key = jax.random.PRNGKey(0)
+    dense = b.init_dense(key)
+    table = b.init_table(key)
+    G, cap = 2, 128
+    batch = {
+        "ids": jax.random.randint(key, (G, cap), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (G, cap), 0, cfg.vocab_size),
+        "timestamps": jnp.cumsum(
+            jax.random.randint(key, (G, cap), 0, 900), 1).astype(jnp.int32),
+        "offsets": jnp.asarray([[0, 64, 128], [0, 100, 120]], jnp.int32),
+        "neg_ids": jax.random.randint(key, (G, cap, 8), 0, cfg.vocab_size),
+        "rng": jnp.zeros((2,), jnp.uint32),
+    }
+    loss, grads = jax.value_and_grad(
+        lambda d: b.loss(d, table, batch, neg_mode="segmented",
+                         neg_segment=32))(dense)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.abs(g.astype(jnp.float32)).sum())
+             for g in jax.tree.leaves(grads))
+    assert gn > 0

@@ -1,0 +1,96 @@
+"""§4.3 negative-sampling optimization properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import negative_sampling as NS
+
+
+def _setup(T=64, R=8, D=16, V=100, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    out = jax.random.normal(ks[0], (T, D), jnp.float32)
+    table = jax.random.normal(ks[1], (V, D), jnp.float32)
+    ids = jax.random.randint(ks[2], (T, R), 0, V)
+    return out, table, ids
+
+
+def test_segmented_equals_baseline_fp32():
+    out, table, ids = _setup()
+    neg_emb = jnp.take(table, ids, axis=0)
+    base = NS.neg_logits_baseline(out, neg_emb)
+    seg = NS.neg_logits_segmented(out, table, ids, segment=16,
+                                  fetch_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(seg),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_fp16_quantization_error_small():
+    """§4.3.2: fp16 fetch changes logits by O(2^-11) relative — the paper's
+    '≤0.05% HR delta' mechanism."""
+    out, table, ids = _setup(D=64)
+    exact = NS.neg_logits_segmented(out, table, ids, segment=16,
+                                    fetch_dtype=jnp.float32)
+    fp16 = NS.neg_logits_segmented(out, table, ids, segment=16,
+                                   fetch_dtype=jnp.float16)
+    rel = np.abs(np.asarray(fp16 - exact)) / (np.abs(np.asarray(exact)) + 1.0)
+    assert rel.max() < 5e-3
+
+
+def test_share_logits_expansion_properties():
+    out, table, ids = _setup(T=32, R=4)
+    neg = NS.neg_logits_baseline(out, jnp.take(table, ids, axis=0))
+    shared = NS.share_logits(jax.random.PRNGKey(1), neg, expansion=3)
+    T, R = neg.shape
+    assert shared.shape == (T, 3 * R)
+    # first R columns are the original logits
+    np.testing.assert_allclose(np.asarray(shared[:, :R]), np.asarray(neg))
+    # auxiliary logits are drawn from the pool of OTHER tokens' logits
+    pool = np.asarray(neg)
+    for t in range(T):
+        own = set(np.round(pool[t], 5).tolist())
+        aux = np.round(np.asarray(shared[t, R:]), 5)
+        others = set(np.round(np.delete(pool, t, axis=0).ravel(), 5).tolist())
+        assert all(a in others for a in aux)
+
+
+def test_share_logits_k1_identity():
+    out, table, ids = _setup(T=16, R=4)
+    neg = NS.neg_logits_baseline(out, jnp.take(table, ids, axis=0))
+    same = NS.share_logits(jax.random.PRNGKey(0), neg, expansion=1)
+    np.testing.assert_array_equal(np.asarray(same), np.asarray(neg))
+
+
+def test_sampled_softmax_is_cross_entropy():
+    """Eq. 2 == CE over [pos | negs] with label 0."""
+    T, R = 8, 5
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    pos = jax.random.normal(ks[0], (T,))
+    neg = jax.random.normal(ks[1], (T, R))
+    loss = NS.sampled_softmax_loss(pos, neg)
+    logits = jnp.concatenate([pos[:, None], neg], axis=1)
+    ce = -jax.nn.log_softmax(logits, axis=1)[:, 0].mean()
+    np.testing.assert_allclose(float(loss), float(ce), rtol=1e-6)
+
+
+def test_sampled_softmax_valid_mask():
+    pos = jnp.asarray([1.0, 99.0])          # second token invalid
+    neg = jnp.zeros((2, 3))
+    valid = jnp.asarray([True, False])
+    masked = NS.sampled_softmax_loss(pos, neg, valid)
+    only_first = NS.sampled_softmax_loss(pos[:1], neg[:1])
+    np.testing.assert_allclose(float(masked), float(only_first), rtol=1e-6)
+
+
+def test_recall_loss_gradient_flows():
+    out, table, ids = _setup(T=32, R=4)
+    pos_ids = jax.random.randint(jax.random.PRNGKey(5), (32,), 0, 100)
+
+    def loss(tbl):
+        lg = NS.neg_logits_segmented(out, tbl, ids, segment=16,
+                                     fetch_dtype=jnp.float32)
+        return NS.recall_loss(out, jnp.take(tbl, pos_ids, axis=0), lg)
+
+    g = jax.grad(loss)(table)
+    assert float(jnp.abs(g).sum()) > 0
+    assert not bool(jnp.isnan(g).any())

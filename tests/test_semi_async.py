@@ -1,0 +1,60 @@
+"""§4.2.2 / Appendix C — semi-async convergence properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import semi_async as SA
+
+
+def _quadratic_grad(A, b):
+    return lambda w, t: A @ w - b
+
+
+def test_delayed_sgd_converges_like_sync():
+    """τ=1 delayed SGD reaches the same optimum on a well-conditioned
+    quadratic; the trajectory gap shrinks with T (Appendix C bound)."""
+    rng = np.random.default_rng(0)
+    Q = rng.normal(size=(8, 8))
+    A = jnp.asarray(Q @ Q.T / 8 + np.eye(8))
+    b = jnp.asarray(rng.normal(size=8))
+    w_star = jnp.linalg.solve(A, b)
+    g = _quadratic_grad(A, b)
+    w0 = jnp.zeros(8)
+
+    gaps = []
+    for T in (50, 200, 800):
+        w_async = SA.delayed_sgd_trajectory(g, w0, lr=0.05, steps=T, tau=1)
+        w_sync = SA.delayed_sgd_trajectory(g, w0, lr=0.05, steps=T, tau=0)
+        gaps.append(float(jnp.linalg.norm(w_async - w_sync)))
+        assert float(jnp.linalg.norm(w_async - w_star)) < 1e-2 or T < 800
+    assert gaps[-1] < gaps[0]          # delay penalty decays with T
+
+
+def test_delay_penalty_bound_monotonic():
+    # higher collision α or delay τ → larger bound; more steps → smaller
+    b = SA.delay_penalty_bound
+    assert b(0.5, 1.0, 1, 100) > b(0.01, 1.0, 1, 100)
+    assert b(0.1, 1.0, 4, 100) > b(0.1, 1.0, 1, 100)
+    assert b(0.1, 1.0, 1, 10_000) < b(0.1, 1.0, 1, 100)
+
+
+def test_collision_alpha_sparse_vs_dense():
+    rng = np.random.default_rng(0)
+    sparse = rng.integers(0, 1_000_000, size=(20, 64))   # α ≈ 0
+    dense = rng.integers(0, 16, size=(20, 64))           # α ≈ 1
+    a_sparse = SA.collision_alpha(sparse)
+    a_dense = SA.collision_alpha(dense)
+    assert a_sparse < 0.01 < a_dense
+    assert a_dense > 0.9
+
+
+def test_semi_async_update_state_machine():
+    table = jnp.zeros((4, 2))
+    st = SA.init_semi_async(table)
+    g1 = jnp.ones((4, 2))
+    applied, st = SA.semi_async_update(st, g1, lambda g: g)
+    assert float(jnp.abs(applied).sum()) == 0.0          # step 0: zeros
+    g2 = 2 * jnp.ones((4, 2))
+    applied, st = SA.semi_async_update(st, g2, lambda g: g)
+    np.testing.assert_allclose(np.asarray(applied), np.asarray(g1))  # τ=1
+    assert int(st.step) == 2
