@@ -4,8 +4,9 @@ KuaiRand-style data, on whatever device this machine has (~1 min on CPU).
     PYTHONPATH=src python examples/quickstart.py
 
 Shows the public API end to end: config → synthetic data → Appendix-A
-preprocessing → load-balanced jagged loader → GRBundle loss (segmented
-negatives + fp16 fetch + logit sharing) → AdamW/AdaGrad semi-async trainer.
+preprocessing → load-balanced jagged loader → GRBundle loss (fused
+ID-driven negatives: gather + fp16 fetch + logit sharing + Eq.-2 reduce in
+one pass) → AdamW/AdaGrad semi-async trainer.
 """
 import os
 import sys
@@ -44,10 +45,10 @@ def main():
                       num_negatives=16, num_items=len(remap),
                       strategy="token_realloc")
 
-    # 4. train step: §4.3 segmented negatives + fp16 fetch + logit sharing,
-    #    §4.2.2 semi-async sparse updates
+    # 4. train step: §4.3 fused negative path (megakernel on TPU, remat'd
+    #    scan elsewhere) + fp16 fetch + logit sharing, §4.2.2 semi-async
     step = jax.jit(make_gr_train_step(
-        lambda d, t, b: bundle.loss(d, t, b, neg_mode="segmented",
+        lambda d, t, b: bundle.loss(d, t, b, neg_mode="fused",
                                     neg_segment=64, expansion=2),
         semi_async=True))
 

@@ -15,14 +15,27 @@ the paper's example sizes) — §4.3 removes it three ways:
     token-level shuffle expands the effective negative set k× without any
     additional embedding lookups (Eq. 2's Δ term).
 
-``sampled_softmax_loss`` is Eq. 2.
+``sampled_softmax_loss`` is Eq. 2. :func:`fused_sampled_softmax_loss` is
+the production entry point: it dispatches to the fused ID-driven Pallas
+megakernel (``repro.kernels.neg_logits.fused_recall_lse``) on TPU — gather
++ dequant + logit sharing + logsumexp in one pass, no (T, R, D) embeddings
+or (T, R·k) logits in HBM — and to :func:`fused_recall_lse_xla` (a
+remat'd segmented scan with identical numerics) elsewhere.
 """
 from __future__ import annotations
 
+import logging
+from functools import partial
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.neg_logits import fused_recall_lse
+from repro.kernels.neg_logits.fused import NEG_POOL
+from repro.kernels.neg_logits.ops import prepare_fused_inputs
+
+logger = logging.getLogger(__name__)
 
 
 # --------------------------------------------------------------------------
@@ -72,7 +85,9 @@ def neg_logits_segmented(out_emb: jax.Array, table: jax.Array,
     def body(_, si):
         o = jax.lax.dynamic_slice_in_dim(out_emb, si * segment, segment, 0)
         idsb = jax.lax.dynamic_slice_in_dim(neg_ids, si * segment, segment, 0)
-        nb = jnp.take(table.astype(fetch_dtype), idsb.reshape(-1), axis=0)
+        # quantize the gathered rows only — casting `table` here would copy
+        # the whole (V, D) array every call.
+        nb = jnp.take(table, idsb.reshape(-1), axis=0).astype(fetch_dtype)
         nb = nb.reshape(segment, R, D)
         lg = jnp.einsum("td,trd->tr", o.astype(jnp.float32),
                         nb.astype(jnp.float32)) / tau
@@ -85,16 +100,25 @@ def neg_logits_segmented(out_emb: jax.Array, table: jax.Array,
 def offload_negatives(neg_emb: jax.Array) -> jax.Array:
     """Host-offload the negative tensor (TPU: pinned host memory; the
     double-buffered fetch is then driven by the segmented consumer).
-    Falls back to a no-op where the platform has no host memory space."""
-    try:
-        dev = neg_emb.devices().pop() if hasattr(neg_emb, "devices") else None
-        if dev is None:
-            return neg_emb
-        import jax.sharding as jsh
-        sharding = jsh.SingleDeviceSharding(dev, memory_kind="pinned_host")
-        return jax.device_put(neg_emb, sharding)
-    except Exception:
+    Falls back to a no-op where the platform has no pinned-host memory
+    space — real sharding/transfer errors propagate instead of being
+    swallowed."""
+    if not hasattr(neg_emb, "devices"):
+        return neg_emb                      # tracer/ShapeDtypeStruct
+    devs = neg_emb.devices()
+    if not devs:
         return neg_emb
+    dev = next(iter(devs))
+    try:
+        dev.memory("pinned_host")           # capability probe only
+    except (ValueError, KeyError, AttributeError,
+            jax.errors.JaxRuntimeError) as e:
+        logger.debug("offload_negatives: no pinned_host memory on %s (%s); "
+                     "keeping negatives on-device", dev, e)
+        return neg_emb
+    import jax.sharding as jsh
+    sharding = jsh.SingleDeviceSharding(dev, memory_kind="pinned_host")
+    return jax.device_put(neg_emb, sharding)
 
 
 # --------------------------------------------------------------------------
@@ -116,9 +140,11 @@ def share_logits(key, neg_logits: jax.Array, expansion: int,
     n_aux = (expansion - 1) * R
     pool = neg_logits.reshape(T * R)
     if valid is not None:
-        # invalid tokens' logits must not leak into the pool: map their
-        # pool slots onto valid ones by masking the draw below.
-        pass
+        # invalid (padded) tokens' logits must not leak into the pool:
+        # their slots are masked to a large-negative sentinel so a drawn
+        # slot contributes exp(NEG_POOL) ≈ 0 to the consumer's softmax —
+        # same convention as the fused kernel's in-VMEM pool mask.
+        pool = jnp.where(jnp.repeat(valid, R), pool, NEG_POOL)
     # per-token shuffled draw from the pool, excluding the token's own rows
     keys = jax.random.split(key, T)
 
@@ -160,3 +186,92 @@ def recall_loss(out_emb: jax.Array, pos_emb: jax.Array,
     pos = jnp.sum(out_emb.astype(jnp.float32) * pos_emb.astype(jnp.float32),
                   axis=-1) / tau
     return sampled_softmax_loss(pos, neg_logits, valid)
+
+
+# --------------------------------------------------------------------------
+# fused ID-driven recall path (tentpole): one pass from ids to Eq.-2 lse
+# --------------------------------------------------------------------------
+
+def fused_recall_lse_xla(out_emb: jax.Array, pos_logit: jax.Array,
+                         table: jax.Array, neg_ids: jax.Array, *,
+                         segment: int = 128, tau: float = 1.0,
+                         expansion: int = 1,
+                         key: Optional[jax.Array] = None,
+                         valid: Optional[jax.Array] = None,
+                         fetch_dtype=None) -> jax.Array:
+    """XLA twin of the fused megakernel (identical numerics, same
+    per-segment shuffle): a remat'd segmented scan, so neither the forward
+    nor the backward ever holds (T, R, D) gathered rows or (T, R·k)
+    expanded logits — the backward re-gathers per segment exactly like the
+    Pallas custom VJP."""
+    T, R = neg_ids.shape
+    D = table.shape[1]
+    inv_tau = 1.0 / tau
+    o_p, pos_p, ids_p, valid_p, perms, n_seg = prepare_fused_inputs(
+        out_emb, pos_logit, table, neg_ids, segment=segment,
+        expansion=expansion, key=key, valid=valid)
+
+    @partial(jax.checkpoint,
+             policy=jax.checkpoint_policies.nothing_saveable)
+    def body(_, si):
+        o = jax.lax.dynamic_slice_in_dim(o_p, si * segment, segment, 0)
+        idsb = jax.lax.dynamic_slice_in_dim(ids_p, si * segment, segment, 0)
+        posb = jax.lax.dynamic_slice_in_dim(pos_p, si * segment, segment, 0)
+        vb = jax.lax.dynamic_slice_in_dim(valid_p, si * segment, segment, 0)
+        rows = jnp.take(table, idsb.reshape(-1), axis=0)
+        if fetch_dtype is not None:
+            rows = rows.astype(fetch_dtype)
+        logits = jnp.einsum("td,trd->tr", o.astype(jnp.float32),
+                            rows.reshape(segment, R, D).astype(jnp.float32)
+                            ) * inv_tau
+        cols = [posb[:, None], logits]
+        if expansion > 1:
+            masked = jnp.where(vb[:, None] > 0.0, logits, NEG_POOL)
+            pseg = jax.lax.dynamic_index_in_dim(perms, si, 0,
+                                                keepdims=False)
+            for e in range(expansion - 1):
+                cols.append(jnp.take(masked, pseg[e], axis=0))
+        alls = jnp.concatenate(cols, axis=1)
+        m = jnp.max(alls, axis=1, keepdims=True)
+        lse = m[:, 0] + jnp.log(jnp.sum(jnp.exp(alls - m), axis=1))
+        return None, lse
+
+    _, lses = jax.lax.scan(body, None, jnp.arange(n_seg, dtype=jnp.int32))
+    return lses.reshape(-1)[:T]
+
+
+def fused_sampled_softmax_loss(out_emb: jax.Array, pos_emb: jax.Array,
+                               table: jax.Array, neg_ids: jax.Array, *,
+                               key: Optional[jax.Array] = None,
+                               tau: float = 1.0,
+                               valid: Optional[jax.Array] = None,
+                               segment: int = 128, expansion: int = 1,
+                               fetch_dtype=jnp.float16,
+                               impl: Optional[str] = None,
+                               interpret: Optional[bool] = None
+                               ) -> jax.Array:
+    """Eq. 2 straight from ids: the production recall loss.
+
+    ``impl``: "pallas" (fused megakernel; default on TPU), "xla" (remat'd
+    segmented scan; default elsewhere), or None for backend dispatch. Both
+    implementations share numerics and the deterministic per-segment
+    sharing shuffle, so they are interchangeable mid-training.
+    """
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    pos = jnp.sum(out_emb.astype(jnp.float32) * pos_emb.astype(jnp.float32),
+                  axis=-1) / tau
+    kw = dict(segment=segment, tau=tau, expansion=expansion, key=key,
+              valid=valid, fetch_dtype=fetch_dtype)
+    if impl == "pallas":
+        lse = fused_recall_lse(out_emb, pos, table, neg_ids,
+                               interpret=interpret, **kw)
+    elif impl == "xla":
+        lse = fused_recall_lse_xla(out_emb, pos, table, neg_ids, **kw)
+    else:
+        raise ValueError(f"unknown fused impl {impl!r}")
+    nll = lse - pos
+    if valid is not None:
+        v = valid.astype(jnp.float32)
+        return jnp.sum(nll * v) / jnp.maximum(jnp.sum(v), 1.0)
+    return jnp.mean(nll)

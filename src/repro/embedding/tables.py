@@ -45,9 +45,12 @@ def lookup(table: jax.Array, ids: jax.Array,
 def lookup_quantized(table: jax.Array, ids: jax.Array,
                      qdtype=jnp.float16) -> jax.Array:
     """§4.3.2: fetch rows in half precision (fp16 paper-faithful; bf16 is
-    the TPU-native variant). Quantization happens at the *fetch*, so the
-    live negative tensor is half the bytes."""
-    return jnp.take(table.astype(qdtype), ids, axis=0)
+    the TPU-native variant). Quantization happens at the *fetch* — only
+    the gathered rows are cast (casting ``table`` first would copy the
+    whole (V, D) array per call), so the live negative tensor is half the
+    bytes. The fused TPU hot path (``repro.kernels.neg_logits``) applies
+    the same rounding in VMEM and never materializes the rows at all."""
+    return jnp.take(table, ids, axis=0).astype(qdtype)
 
 
 def multi_table_lookup(tables: Dict[str, jax.Array],

@@ -3,3 +3,5 @@
 #   jagged_attention/ - fused jagged pointwise attention + RAB (4.1.1)
 #   jagged_lookup/    - scalar-prefetch embedding gather + run-sum bwd (4.1.2)
 #   neg_logits/       - segmented negative-sampling logits (4.3.1-4.3.2)
+#                       + fused ID-driven recall megakernel (4.3.1-4.3.3:
+#                       gather/dequant/logit-sharing/logsumexp in one pass)

@@ -1,2 +1,6 @@
-from repro.kernels.neg_logits.ops import neg_logits
-from repro.kernels.neg_logits.ref import neg_logits_ref
+from repro.kernels.neg_logits.ops import (fused_recall_lse, make_share_perms,
+                                          neg_logits)
+from repro.kernels.neg_logits.ref import fused_recall_lse_ref, neg_logits_ref
+
+__all__ = ["neg_logits", "neg_logits_ref", "fused_recall_lse",
+           "fused_recall_lse_ref", "make_share_perms"]

@@ -1,0 +1,234 @@
+"""Pallas TPU megakernel: fused ID-driven negative-sampling recall path.
+
+One pass fuses the four stages the paper keeps separate (§4.3.1-§4.3.3):
+
+  gather    — scalar-prefetched negative ids drive the table BlockSpec
+              ``index_map`` (the ``jagged_lookup`` technique), so each grid
+              step DMAs exactly one *live* embedding row HBM→VMEM; the
+              (T, R, D) negative tensor never exists anywhere.
+  dequant   — rows stored (or emulated-fetched) fp16/bf16 are widened to
+              fp32 in VMEM right before the dot (§4.3.2).
+  sharing   — intra-batch logit sharing (§4.3.3) is a deterministic
+              per-segment shuffle of the already-VMEM-resident segment
+              logits (a one-hot permutation matmul), so the expanded
+              (T, R·k) logit tensor never exists either.
+  reduce    — the per-token logsumexp of Eq. 2 over
+              [pos | own negatives | shared negatives] is produced directly;
+              HBM output is just (T,) plus the tiny per-segment blocks.
+
+Grid layout: ``(n_seg, segment·R)`` — the outer dim walks fixed-size
+segments of packed valid positions, the inner dim walks that segment's
+(token, slot) pairs one gathered row at a time. Output blocks are indexed
+by the outer dim only, so they stay VMEM-resident across the inner sweep
+and are flushed once per segment (the standard inner-accumulation pattern).
+
+Backward is the same sweep twice inside one kernel (grid
+``(n_seg, 2·segment·R)``): phase 0 re-gathers and rebuilds the segment
+logits, the phase boundary turns them into softmax weights (folding the
+shared-logit contributions back onto their source rows with the transposed
+permutation), phase 1 re-gathers to accumulate d_out. The table gradient
+leaves the kernel as per-(token, slot) *weights* only — the ops wrapper
+expands them to sparse (id, grad_row) pairs and reduces through the
+existing sorted run-sum scatter kernel, never a dense (V, D) scatter-add
+of (T, R, D) rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Sentinel for masked (invalid-token) pool logits: large-negative instead of
+# -inf so logsumexp arithmetic stays NaN-free even if a whole row masks out.
+NEG_POOL = -1e30
+
+
+def _dequant(row_ref, fetch_dtype):
+    row = row_ref[...]
+    if fetch_dtype is not None and row.dtype != jnp.dtype(fetch_dtype):
+        # fp32-stored master table with an fp16/bf16 *fetch*: round in VMEM
+        # so numerics match a half-stored table (§4.3.2) without ever
+        # casting the (V, D) table in HBM.
+        row = row.astype(fetch_dtype)
+    return row.astype(jnp.float32)
+
+
+def _share_terms(logits, valid_col, perm_ref, expansion, segment):
+    """Per-segment §4.3.3 sharing terms: yields (P_e, aux_e) per expansion
+    slot, where P_e is the one-hot matrix of the deterministic shuffle and
+    aux_e = P_e @ masked_logits (seg, R). Single source of truth for the
+    masking sentinel and permutation layout used by forward AND backward."""
+    if expansion <= 1:
+        return
+    masked = jnp.where(valid_col > 0.0, logits, NEG_POOL)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (segment, segment), 1)
+    for e in range(expansion - 1):
+        pe = perm_ref[0, e, :]                              # (segment,)
+        p_mat = (iota == pe[:, None]).astype(jnp.float32)   # (seg, seg)
+        yield p_mat, jax.lax.dot(p_mat, masked,
+                                 preferred_element_type=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# forward: gather + dequant + share + logsumexp
+# --------------------------------------------------------------------------
+
+def _fwd_kernel(ids_ref, o_ref, tbl_ref, pos_ref, valid_ref, perm_ref,
+                lse_ref, acc_ref, *, segment, R, expansion, inv_tau,
+                fetch_dtype):
+    j = pl.program_id(1)
+    t, r = j // R, j % R
+    row = _dequant(tbl_ref, fetch_dtype)                    # (1, D)
+    o_t = pl.load(o_ref, (pl.ds(t, 1), slice(None))).astype(jnp.float32)
+    logit = jnp.sum(o_t * row) * inv_tau
+    pl.store(acc_ref, (pl.ds(t, 1), pl.ds(r, 1)), logit[None, None])
+
+    @pl.when(j == segment * R - 1)
+    def _finalize():
+        logits = acc_ref[...]                               # (seg, R)
+        pos = pos_ref[0, :].astype(jnp.float32)             # (seg,)
+        vcol = valid_ref[0, :][:, None]                     # (seg, 1)
+        cols = [pos[:, None], logits]
+        cols += [aux for _, aux in _share_terms(logits, vcol, perm_ref,
+                                                expansion, segment)]
+        alls = jnp.concatenate(cols, axis=1)                # (seg, 1+kR)
+        m = jnp.max(alls, axis=1, keepdims=True)
+        lse = m[:, 0] + jnp.log(jnp.sum(jnp.exp(alls - m), axis=1))
+        lse_ref[0, :] = lse
+
+
+def fwd_pallas(out_emb: jax.Array, pos_logit2d: jax.Array, table: jax.Array,
+               ids_flat: jax.Array, valid2d: jax.Array, perms: jax.Array, *,
+               segment: int, R: int, expansion: int, tau: float,
+               fetch_dtype=None, interpret: bool = False) -> jax.Array:
+    """out_emb (Tp, D) · ids_flat (Tp·R,) → per-token lse (n_seg, segment)."""
+    Tp, D = out_emb.shape
+    n_seg = Tp // segment
+    seg_r = segment * R
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_seg, seg_r),
+        in_specs=[
+            pl.BlockSpec((segment, D), lambda si, j, ids: (si, 0)),
+            pl.BlockSpec((1, table.shape[1]),
+                         lambda si, j, ids: (ids[si * seg_r + j], 0)),
+            pl.BlockSpec((1, segment), lambda si, j, ids: (si, 0)),
+            pl.BlockSpec((1, segment), lambda si, j, ids: (si, 0)),
+            pl.BlockSpec((1, perms.shape[1], segment),
+                         lambda si, j, ids: (si, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, segment), lambda si, j, ids: (si, 0)),
+        scratch_shapes=[pltpu.VMEM((segment, R), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, segment=segment, R=R,
+                          expansion=expansion, inv_tau=1.0 / tau,
+                          fetch_dtype=fetch_dtype),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_seg, segment), jnp.float32),
+        interpret=interpret,
+    )(ids_flat, out_emb, table, pos_logit2d, valid2d, perms)
+
+
+# --------------------------------------------------------------------------
+# backward: two-phase sweep in one kernel
+#   phase 0 (j < seg·R)   re-gather → rebuild segment logits
+#   boundary (j == seg·R) logits → softmax weights w (sharing transposed
+#                         back onto source rows), d_pos
+#   phase 1 (j ≥ seg·R)   re-gather → accumulate d_out from w
+# --------------------------------------------------------------------------
+
+def _bwd_kernel(ids_ref, o_ref, tbl_ref, pos_ref, valid_ref, lse_ref, g_ref,
+                perm_ref, w_ref, dout_ref, dpos_ref, acc_ref, w_acc, do_acc,
+                *, segment, R, expansion, inv_tau, fetch_dtype):
+    j = pl.program_id(1)
+    seg_r = segment * R
+    jj = j % seg_r
+    t, r = jj // R, jj % R
+    row = _dequant(tbl_ref, fetch_dtype)                    # (1, D)
+
+    @pl.when(j < seg_r)
+    def _rebuild():
+        o_t = pl.load(o_ref, (pl.ds(t, 1), slice(None))).astype(jnp.float32)
+        logit = jnp.sum(o_t * row) * inv_tau
+        pl.store(acc_ref, (pl.ds(t, 1), pl.ds(r, 1)), logit[None, None])
+
+    @pl.when(j == seg_r)
+    def _weights():
+        logits = acc_ref[...]                               # (seg, R)
+        pos = pos_ref[0, :].astype(jnp.float32)
+        lse = lse_ref[0, :].astype(jnp.float32)
+        g = g_ref[0, :].astype(jnp.float32)
+        vcol = valid_ref[0, :][:, None]
+        # d lse / d logit = softmax prob; scale by upstream g per consumer.
+        w = g[:, None] * jnp.exp(logits - lse[:, None])
+        for p_mat, aux in _share_terms(logits, vcol, perm_ref, expansion,
+                                       segment):
+            p_aux = g[:, None] * jnp.exp(aux - lse[:, None])
+            # consumer t borrowed source perm_e[t]'s rows → transpose
+            # routes each consumer's prob mass back to its source row.
+            w = w + jax.lax.dot(p_mat.T, p_aux,
+                                preferred_element_type=jnp.float32)
+        w_acc[...] = w
+        do_acc[...] = jnp.zeros_like(do_acc)
+        dpos_ref[0, :] = g * jnp.exp(pos - lse)
+
+    @pl.when(j >= seg_r)
+    def _accum_dout():
+        wv = pl.load(w_acc, (pl.ds(t, 1), pl.ds(r, 1)))     # (1, 1)
+        cur = pl.load(do_acc, (pl.ds(t, 1), slice(None)))
+        pl.store(do_acc, (pl.ds(t, 1), slice(None)),
+                 cur + wv * row * inv_tau)
+
+    @pl.when(j == 2 * seg_r - 1)
+    def _flush():
+        w_ref[0, :, :] = w_acc[...]
+        dout_ref[...] = do_acc[...].astype(dout_ref.dtype)
+
+
+def bwd_pallas(out_emb: jax.Array, pos_logit2d: jax.Array, table: jax.Array,
+               ids_flat: jax.Array, valid2d: jax.Array, perms: jax.Array,
+               lse2d: jax.Array, g2d: jax.Array, *, segment: int, R: int,
+               expansion: int, tau: float, fetch_dtype=None,
+               interpret: bool = False):
+    """→ (w (n_seg, seg, R) softmax weights·g, d_out (Tp, D) fp32,
+         d_pos (n_seg, seg) fp32). Table grads are finished by the caller
+    via the sorted run-sum scatter (sparse (id, w·o) pairs)."""
+    Tp, D = out_emb.shape
+    n_seg = Tp // segment
+    seg_r = segment * R
+    seg_spec = pl.BlockSpec((1, segment), lambda si, j, ids: (si, 0))
+    w, dout, dpos = pl.pallas_call(
+        functools.partial(_bwd_kernel, segment=segment, R=R,
+                          expansion=expansion, inv_tau=1.0 / tau,
+                          fetch_dtype=fetch_dtype),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_seg, 2 * seg_r),
+            in_specs=[
+                pl.BlockSpec((segment, D), lambda si, j, ids: (si, 0)),
+                pl.BlockSpec((1, table.shape[1]),
+                             lambda si, j, ids:
+                             (ids[si * seg_r + j % seg_r], 0)),
+                seg_spec, seg_spec, seg_spec, seg_spec,
+                pl.BlockSpec((1, perms.shape[1], segment),
+                             lambda si, j, ids: (si, 0, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, segment, R), lambda si, j, ids: (si, 0, 0)),
+                pl.BlockSpec((segment, D), lambda si, j, ids: (si, 0)),
+                seg_spec,
+            ],
+            scratch_shapes=[pltpu.VMEM((segment, R), jnp.float32),
+                            pltpu.VMEM((segment, R), jnp.float32),
+                            pltpu.VMEM((segment, D), jnp.float32)],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((n_seg, segment, R), jnp.float32),
+                   jax.ShapeDtypeStruct((Tp, D), jnp.float32),
+                   jax.ShapeDtypeStruct((n_seg, segment), jnp.float32)],
+        interpret=interpret,
+    )(ids_flat, out_emb, table, pos_logit2d, valid2d, lse2d, g2d, perms)
+    return w, dout, dpos

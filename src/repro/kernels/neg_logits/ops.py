@@ -1,4 +1,12 @@
-"""jit'd wrapper for the segmented negative-logits kernel (§4.3.1-2)."""
+"""jit'd wrappers for the negative-logits kernels.
+
+* :func:`neg_logits` — the original segmented kernel over a materialized
+  (T, R, D) tensor. Kept as the faithful §4.3.1 baseline for Table 7.
+* :func:`fused_recall_lse` — the fused ID-driven megakernel: consumes
+  (out_emb, neg_ids, table) directly and returns the per-token logsumexp
+  of Eq. 2, with a custom VJP whose table gradient is reduced through the
+  sorted run-sum scatter from ``jagged_lookup`` as sparse (id, row) pairs.
+"""
 from __future__ import annotations
 
 from typing import Optional
@@ -6,6 +14,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.jagged_lookup.ops import scatter_add_rows
+from repro.kernels.neg_logits import fused as F
 from repro.kernels.neg_logits import kernel as K
 
 
@@ -48,3 +58,119 @@ def neg_logits(out_emb: jax.Array, neg_emb: jax.Array, *,
     _logits.defvjp(fwd, bwd)
     out = _logits(out_emb, neg_emb)
     return out[:T] if pad else out
+
+
+# --------------------------------------------------------------------------
+# fused ID-driven recall path (§4.3.1 + §4.3.2 + §4.3.3 in one kernel)
+# --------------------------------------------------------------------------
+
+def make_share_perms(key, n_seg: int, segment: int,
+                     expansion: int) -> jax.Array:
+    """Deterministic per-segment shuffle for §4.3.3 logit sharing.
+
+    Returns (n_seg, max(expansion-1, 1), segment) int32; entry [s, e, t] is
+    the segment-local source token whose R logits consumer t borrows for
+    expansion slot e — a random cyclic shift (never the identity, so a
+    token can't borrow its own rows). For expansion ≤ 1 a zero dummy with
+    the same rank is returned so kernel arity stays fixed.
+    """
+    if expansion <= 1:
+        return jnp.zeros((n_seg, 1, segment), jnp.int32)
+    shifts = jax.random.randint(key, (n_seg, expansion - 1), 1, segment,
+                                dtype=jnp.int32)
+    base = jnp.arange(segment, dtype=jnp.int32)
+    return (base[None, None, :] + shifts[:, :, None]) % segment
+
+
+def _pad_rows(x: jax.Array, pad: int) -> jax.Array:
+    if not pad:
+        return x
+    return jnp.concatenate([x, jnp.zeros((pad, *x.shape[1:]), x.dtype)])
+
+
+def prepare_fused_inputs(out_emb: jax.Array, pos_logit: jax.Array,
+                         table: jax.Array, neg_ids: jax.Array, *,
+                         segment: int, expansion: int,
+                         key: Optional[jax.Array],
+                         valid: Optional[jax.Array]):
+    """Shared pad/clip/mask/shuffle prep for the Pallas megakernel, its XLA
+    twin, and the materialized oracle — a single copy backs their
+    'identical numerics, interchangeable mid-training' contract.
+
+    Returns (o_p, pos_p, ids_p, valid_p, perms, n_seg) with all row arrays
+    zero-padded to a multiple of ``segment`` (padded tokens are invalid,
+    their ids clipped to row 0).
+    """
+    T, R = neg_ids.shape
+    V = table.shape[0]
+    assert 1 <= expansion <= segment, (expansion, segment)
+    pad = (-T) % segment
+    n_seg = (T + pad) // segment
+    valid_p = _pad_rows(jnp.ones((T,), jnp.float32) if valid is None
+                        else valid.astype(jnp.float32), pad)
+    pos_p = _pad_rows(pos_logit.astype(jnp.float32), pad)
+    ids_p = _pad_rows(jnp.clip(neg_ids, 0, V - 1).astype(jnp.int32), pad)
+    o_p = _pad_rows(out_emb, pad)
+    perms = make_share_perms(key if key is not None else jax.random.PRNGKey(0),
+                             n_seg, segment, expansion)
+    return o_p, pos_p, ids_p, valid_p, perms, n_seg
+
+
+def fused_recall_lse(out_emb: jax.Array, pos_logit: jax.Array,
+                     table: jax.Array, neg_ids: jax.Array, *,
+                     segment: int = 128, tau: float = 1.0,
+                     expansion: int = 1, key: Optional[jax.Array] = None,
+                     valid: Optional[jax.Array] = None, fetch_dtype=None,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """Per-token logsumexp over [pos | R negatives | (k−1)·R shared] (Eq. 2).
+
+    out_emb (T, D), pos_logit (T,), table (V, D) — possibly stored
+    fp16/bf16 — neg_ids (T, R) int32. Neither the (T, R, D) negative
+    embeddings nor the (T, R·k) expanded logits ever exist in HBM: rows are
+    gathered segment-by-segment straight into VMEM, and sharing shuffles
+    VMEM-resident logits. Differentiable in (out_emb, pos_logit, table);
+    the table gradient is reduced from sparse (id, w·out_row) pairs through
+    the sorted run-sum kernel.
+    """
+    interpret_ = default_interpret() if interpret is None else interpret
+    T, R = neg_ids.shape
+    V, D = table.shape
+    inv_tau = 1.0 / tau
+
+    o_p, pos_p, ids_p, valid_p, perms, n_seg = prepare_fused_inputs(
+        out_emb, pos_logit, table, neg_ids, segment=segment,
+        expansion=expansion, key=key, valid=valid)
+    Tp = n_seg * segment
+    valid2 = valid_p.reshape(n_seg, segment)
+    pos2 = pos_p.reshape(n_seg, segment)
+    ids_flat = ids_p.reshape(-1)
+
+    @jax.custom_vjp
+    def _lse(o, pos2d, tbl):
+        return F.fwd_pallas(o, pos2d, tbl, ids_flat, valid2, perms,
+                            segment=segment, R=R, expansion=expansion,
+                            tau=tau, fetch_dtype=fetch_dtype,
+                            interpret=interpret_)
+
+    def fwd(o, pos2d, tbl):
+        lse = _lse(o, pos2d, tbl)
+        return lse, (o, pos2d, tbl, lse)
+
+    def bwd(res, g):
+        o, pos2d, tbl, lse = res
+        w, dout, dpos = F.bwd_pallas(
+            o, pos2d, tbl, ids_flat, valid2, perms, lse,
+            g.astype(jnp.float32), segment=segment, R=R,
+            expansion=expansion, tau=tau, fetch_dtype=fetch_dtype,
+            interpret=interpret_)
+        # sparse (id, grad_row) pairs → sorted run-sum reduction; rows are
+        # per-(token, slot) so duplicates across the batch sum correctly.
+        rows = (w.reshape(Tp, R)[:, :, None]
+                * (o.astype(jnp.float32) * inv_tau)[:, None, :]
+                ).reshape(Tp * R, D)
+        dtbl = scatter_add_rows(rows, ids_flat, V,
+                                interpret=interpret_).astype(tbl.dtype)
+        return dout.astype(o.dtype), dpos, dtbl
+
+    _lse.defvjp(fwd, bwd)
+    return _lse(o_p, pos2, table).reshape(-1)[:T]

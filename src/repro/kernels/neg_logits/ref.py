@@ -1,11 +1,57 @@
-"""Pure-jnp oracle for the segmented negative-logits kernel."""
+"""Pure-jnp oracles for the negative-logits kernels (fully materialized)."""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.neg_logits.fused import NEG_POOL
 
 
 def neg_logits_ref(out_emb: jax.Array, neg_emb: jax.Array,
                    tau: float = 1.0) -> jax.Array:
     return jnp.einsum("td,trd->tr", out_emb.astype(jnp.float32),
                       neg_emb.astype(jnp.float32)) / tau
+
+
+def fused_recall_lse_ref(out_emb: jax.Array, pos_logit: jax.Array,
+                         table: jax.Array, neg_ids: jax.Array, *,
+                         segment: int = 128, tau: float = 1.0,
+                         expansion: int = 1,
+                         key: Optional[jax.Array] = None,
+                         valid: Optional[jax.Array] = None,
+                         fetch_dtype=None) -> jax.Array:
+    """Materialized oracle for :func:`ops.fused_recall_lse`: gathers the
+    full (T, R, D) tensor and the expanded (n_seg, seg, k·R) logits — the
+    very buffers the fused kernel exists to avoid — then reduces to the
+    identical per-token logsumexp (same per-segment shuffle, same masking
+    sentinel, same fetch rounding)."""
+    from repro.kernels.neg_logits.ops import prepare_fused_inputs
+
+    T, R = neg_ids.shape
+    D = table.shape[1]
+    o_p, pos_p, ids_p, valid_p, perms, n_seg = prepare_fused_inputs(
+        out_emb, pos_logit, table, neg_ids, segment=segment,
+        expansion=expansion, key=key, valid=valid)
+    Tp = n_seg * segment
+    valid3 = valid_p.reshape(n_seg, segment)
+    pos3 = pos_p.reshape(n_seg, segment)
+
+    rows = jnp.take(table, ids_p.reshape(-1), axis=0)
+    if fetch_dtype is not None:
+        rows = rows.astype(fetch_dtype)
+    neg_emb = rows.reshape(Tp, R, D).astype(jnp.float32)
+    logits = (jnp.einsum("td,trd->tr", o_p.astype(jnp.float32), neg_emb)
+              / tau).reshape(n_seg, segment, R)
+
+    cols = [pos3[:, :, None], logits]
+    if expansion > 1:
+        masked = jnp.where(valid3[:, :, None] > 0.0, logits, NEG_POOL)
+        for e in range(expansion - 1):
+            cols.append(jnp.take_along_axis(
+                masked, perms[:, e, :, None], axis=1))
+    alls = jnp.concatenate(cols, axis=2)
+    m = jnp.max(alls, axis=2, keepdims=True)
+    lse = m[:, :, 0] + jnp.log(jnp.sum(jnp.exp(alls - m), axis=2))
+    return lse.reshape(-1)[:T]

@@ -42,8 +42,8 @@ def main():
     ap.add_argument("--num-negatives", type=int, default=32)
     ap.add_argument("--strategy", default="token_realloc",
                     choices=["fixed", "token_scaling", "token_realloc"])
-    ap.add_argument("--neg-mode", default="segmented",
-                    choices=["baseline", "segmented"])
+    ap.add_argument("--neg-mode", default="fused",
+                    choices=["baseline", "segmented", "fused"])
     ap.add_argument("--expansion", type=int, default=1)
     ap.add_argument("--no-semi-async", action="store_true")
     ap.add_argument("--use-kernel", action="store_true",

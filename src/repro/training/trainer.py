@@ -8,7 +8,9 @@
 
 * :func:`make_gr_train_step` — the paper's training step: sparse lookup
   (HSP sparse-exchange or dense baseline), jagged dense model, sampled-
-  softmax recall loss (§4.3 modes), AdamW on dense params, Eq.-1 AdaGrad
+  softmax recall loss (§4.3 modes; the default is the fused ID-driven
+  megakernel path, whose custom VJP delivers the table gradient through
+  the sorted run-sum scatter), AdamW on dense params, Eq.-1 AdaGrad
   on the table, optionally τ=1 semi-async sparse updates (§4.2.2).
 """
 from __future__ import annotations
@@ -114,7 +116,9 @@ def make_gr_train_step(loss_fn: Callable[[Params, jax.Array, Batch],
                        lr_dense: float = 4e-3, lr_sparse: float = 4e-3,
                        semi_async: bool = True):
     """loss_fn(dense_params, table, batch) → scalar (built from
-    GRBundle.loss with the lookup/neg-sampling modes already bound)."""
+    GRBundle.loss with the lookup/neg-sampling modes already bound; the
+    default "fused" mode keeps the whole negative path out of HBM and its
+    table grad arrives pre-reduced from sparse (id, row) pairs)."""
 
     def train_step(state: GRTrainState, batch: Batch):
         (loss, _), (gd, gt) = jax.value_and_grad(

@@ -2,6 +2,7 @@
 jagged loader."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.data.kuairand import (drop_negative, five_core_filter,

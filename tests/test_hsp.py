@@ -5,6 +5,7 @@ unique-accumulate parts are hypothesis property tests in-process.
 """
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from spmd_util import run_spmd

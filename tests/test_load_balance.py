@@ -1,6 +1,7 @@
 """§4.1.3 load balancing — Table 3 properties."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import load_balance as LB

@@ -82,6 +82,37 @@ def test_sampled_softmax_valid_mask():
     np.testing.assert_allclose(float(masked), float(only_first), rtol=1e-6)
 
 
+def test_share_logits_valid_masking():
+    """Invalid tokens' logits must not leak into the shared pool: drawn
+    slots are either a valid token's logit or the ≈-inf mask sentinel."""
+    out, table, ids = _setup(T=32, R=4)
+    neg = NS.neg_logits_baseline(out, jnp.take(table, ids, axis=0))
+    valid = jnp.arange(32) < 24
+    shared = NS.share_logits(jax.random.PRNGKey(1), neg, expansion=2,
+                             valid=valid)
+    np.testing.assert_allclose(np.asarray(shared[:, :4]), np.asarray(neg))
+    pool_valid = set(np.round(np.asarray(neg[:24]).ravel(), 5).tolist())
+    for a in np.round(np.asarray(shared[:, 4:]).ravel(), 5).tolist():
+        assert a in pool_valid or a <= -1e29
+
+
+def test_segmented_never_casts_full_table():
+    """Regression: the fp16 fetch must cast only gathered rows — a full
+    (V, D) convert of the table would copy it every call."""
+    out, table, ids = _setup()
+    V, D = table.shape
+    f = jax.jit(lambda t: NS.neg_logits_segmented(out, t, ids, segment=16,
+                                                  fetch_dtype=jnp.float16))
+    txt = f.lower(table).as_text()
+    assert f"<{V}x{D}xf16>" not in txt and f"f16[{V},{D}]" not in txt
+
+
+def test_offload_negatives_cpu_fallback_is_identity():
+    x = jnp.arange(32, dtype=jnp.float32).reshape(8, 4)
+    y = NS.offload_negatives(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
 def test_recall_loss_gradient_flows():
     out, table, ids = _setup(T=32, R=4)
     pos_ids = jax.random.randint(jax.random.PRNGKey(5), (32,), 0, 100)
