@@ -58,7 +58,7 @@ def main():
                           max_seq_len=64, num_negatives=16,
                           num_items=n_items, seed=1)
         step = jax.jit(make_gr_train_step(
-            lambda d, t, bt: b.loss(d, t, bt, neg_mode="segmented",
+            lambda d, t, bt: b.loss(d, t, bt, neg_mode="fused",
                                     neg_segment=64, fetch_dtype=fdt)))
         for batch in loader.batches(30):
             nb = {k2: jnp.asarray(v) for k2, v in batch.items()

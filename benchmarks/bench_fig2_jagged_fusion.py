@@ -7,6 +7,11 @@ Paper claim (FuXi-long, 8k): latency 961→431 ms (2.2×), reserved memory
               is the TPU backend, validated separately in tests)
 Memory is compared analytically: live attention-input bytes padded vs
 packed (the padding share is the paper's redundancy).
+
+Second section (PR 2): dense-grid vs work-list Pallas schedules — grid
+steps, live-block ratio, and ``memory_analysis()`` peak temps per regime,
+persisted as BENCH_jagged_attn.json (benchmarks/common.write_bench_json)
+so the perf trajectory accumulates across runs.
 """
 from __future__ import annotations
 
@@ -14,8 +19,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, jagged_inputs, longtail_lengths, time_fn
+from benchmarks.common import (emit, jagged_inputs, longtail_lengths,
+                               time_fn, write_bench_json)
 from repro.configs.base import RABConfig
+from repro.kernels.jagged_attention import build_attn_plan, jagged_attention
 from repro.models.hstu import (init_rab, jagged_pointwise_attention_blocked,
                                rab_bias)
 
@@ -37,6 +44,76 @@ def dense_padded_attention(q, k, v, lens, rab_params, rab):
     a = jnp.where(mask[..., None], a, 0.0) / jnp.maximum(
         lens[:, None, None, None], 1)
     return jnp.einsum("blmh,bmhd->blhd", a.astype(v.dtype), v)
+
+
+def _peak_temp_bytes(fn, *args) -> int:
+    """Peak temp allocation of the jitted callable, -1 if unavailable."""
+    try:
+        ma = jax.jit(fn).lower(*args).compile().memory_analysis()
+        return -1 if ma is None else int(ma.temp_size_in_bytes)
+    except Exception:
+        return -1
+
+
+def kernel_schedule_comparison():
+    """Dense O(nb²) grid vs compacted work-list grid for the Pallas jagged
+    attention kernel (PR-2 tentpole): grid steps, live-block ratio, and
+    measured peak temps per length regime."""
+    rab = RABConfig(num_pos_buckets=64, num_time_buckets=16)
+    H, D, block = 2, 32, 128
+    key = jax.random.PRNGKey(0)
+    rp = init_rab(key, rab, H)
+    results = {}
+    # (regime, rows, mean length, max length): long-tail ≈ the Fig. 2
+    # shape; short_rows is the KuaiRand-style regime (mean ≤ capacity/8,
+    # the acceptance bar for the work-list win).
+    regimes = [("longtail", 8, 230, 512), ("short_rows", 16, 64, 128)]
+    for name, B, mean, max_len in regimes:
+        lens = longtail_lengths(B, mean=mean, max_len=max_len, seed=1)
+        cap = B * max_len                     # fixed model-style capacity
+        q, k, v, offsets, ts = jagged_inputs(key, lens, H, D, cap)
+        plan = build_attn_plan(offsets, ts, cap, block=block,
+                               max_row_len=max_len)
+        nb = plan.num_blocks
+        dense_steps = nb * nb
+        wl_steps = plan.num_pairs
+        live = int(plan.n_live[0])
+
+        fns = {}
+        for sched in ("dense", "worklist"):
+            fns[sched] = jax.jit(lambda q, k, v, s=sched: jagged_attention(
+                q, k, v, offsets, ts, rp, rab, block=block, schedule=s,
+                max_row_len=max_len))
+        t_dense = time_fn(fns["dense"], q, k, v)
+        t_wl = time_fn(fns["worklist"], q, k, v)
+        m_dense = _peak_temp_bytes(fns["dense"], q, k, v)
+        m_wl = _peak_temp_bytes(fns["worklist"], q, k, v)
+
+        results[name] = {
+            "rows": int(B), "mean_len": float(np.mean(lens)),
+            "capacity": int(cap), "block": block, "nb": int(nb),
+            "grid_steps_dense": int(dense_steps),
+            "grid_steps_worklist": int(wl_steps),
+            "live_pairs": live,
+            "live_block_ratio": live / dense_steps,
+            "grid_reduction": dense_steps / wl_steps,
+            "latency_us_dense": t_dense, "latency_us_worklist": t_wl,
+            "peak_temp_bytes_dense": m_dense,
+            "peak_temp_bytes_worklist": m_wl,
+        }
+        emit(f"fig2_jagged_fusion.sched_{name}.dense", t_dense,
+             f"grid_steps={dense_steps} peak_temp_bytes={m_dense}")
+        emit(f"fig2_jagged_fusion.sched_{name}.worklist", t_wl,
+             f"grid_steps={wl_steps} live={live} "
+             f"peak_temp_bytes={m_wl}")
+        emit(f"fig2_jagged_fusion.sched_{name}.reduction", 0.0,
+             f"grid_steps {dense_steps}->{wl_steps} "
+             f"({dense_steps / wl_steps:.1f}x) "
+             f"live_block_ratio={live / dense_steps:.3f} "
+             f"mean_len/cap={np.mean(lens) / cap:.4f}")
+    write_bench_json("jagged_attn", {
+        "bench": "jagged_attention_schedules", "regimes": results})
+    return results
 
 
 def main():
@@ -101,6 +178,8 @@ def main():
          f"{live}/{total_blocks} blocks live -> structural speedup "
          f"{kernel_flop_ratio:.1f}x vs padded (paper 2.2x); "
          f"mem_reduction={1 - bytes_packed / bytes_padded:.0%} (paper 70%)")
+
+    kernel_schedule_comparison()
 
 
 if __name__ == "__main__":

@@ -61,7 +61,7 @@ def main():
     for mode in (False, True):
         state = gr_train_state(b.init_dense(key), b.init_table(key))
         step = jax.jit(make_gr_train_step(
-            lambda d, t, bt: b.loss(d, t, bt, neg_mode="segmented",
+            lambda d, t, bt: b.loss(d, t, bt, neg_mode="fused",
                                     neg_segment=32), semi_async=mode))
         for i in range(12):
             state, m = step(state, batch(i % 3))

@@ -1,6 +1,9 @@
-"""Shared benchmark utilities: timing, CSV emission, synthetic jagged data."""
+"""Shared benchmark utilities: timing, CSV emission, JSON artifacts,
+synthetic jagged data."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable, Dict, List
 
@@ -15,6 +18,18 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def write_bench_json(name: str, payload: Dict) -> str:
+    """Persist a benchmark's structured results as BENCH_<name>.json (in
+    $BENCH_JSON_DIR or the cwd) so ``benchmarks/run.py`` accumulates a
+    machine-readable perf trajectory next to the CSV rows."""
+    path = os.path.join(os.environ.get("BENCH_JSON_DIR", "."),
+                        f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"# wrote {path}", flush=True)
+    return path
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

@@ -35,7 +35,7 @@ def main():
     def build_step(mesh):
         from repro.training.trainer import GRTrainState
         raw = make_gr_train_step(
-            lambda d, t, b: bundle.loss(d, t, b, neg_mode="segmented",
+            lambda d, t, b: bundle.loss(d, t, b, neg_mode="fused",
                                         neg_segment=32))
 
         @jax.jit

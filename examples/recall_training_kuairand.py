@@ -61,7 +61,7 @@ def main():
                           max_seq_len=128, num_negatives=16,
                           num_items=n_items, seed=1)
         step = jax.jit(make_gr_train_step(
-            lambda d, t, b: bundle.loss(d, t, b, neg_mode="segmented",
+            lambda d, t, b: bundle.loss(d, t, b, neg_mode="fused",
                                         neg_segment=64,
                                         fetch_dtype=fetch_dtype,
                                         expansion=2)))

@@ -37,7 +37,7 @@ def main():
     state = gr_train_state(bundle.init_dense(key), bundle.init_table(key))
     loader = GRLoader(seqs, 2, 4, 128, 16, n_items)
     step = jax.jit(make_gr_train_step(
-        lambda d, t, b: bundle.loss(d, t, b, neg_mode="segmented",
+        lambda d, t, b: bundle.loss(d, t, b, neg_mode="fused",
                                     neg_segment=64)))
     for batch in loader.batches(15):
         nb = {k: jnp.asarray(v) for k, v in batch.items() if k != "weights"}
@@ -53,9 +53,9 @@ def main():
         return h  # (G, cap, d)
 
     users = list(seqs)[:32]
-    cap = 128
     G = 4
     per = len(users) // G
+    cap = 256  # holds per-shard worst case: 8 users × 24-item histories
     ids = np.zeros((G, cap), np.int32)
     ts = np.zeros((G, cap), np.int32)
     offsets = np.zeros((G, per + 1), np.int32)

@@ -21,6 +21,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+#: Canonical segment id for padding slots, shared by every jagged layout:
+#: ``JaggedBatch.segment_ids()``, the attention kernels' token metadata,
+#: and the pure-jnp oracles all mark padding with -1 so the ``seg >= 0``
+#: validity test works uniformly (regression-tested in tests/test_jagged).
+NEG_SEG = -1
+
 
 class JaggedBatch(NamedTuple):
     values: jax.Array    # (capacity, *feat)
@@ -46,11 +52,11 @@ class JaggedBatch(NamedTuple):
         return jnp.arange(self.capacity, dtype=jnp.int32) < self.total()
 
     def segment_ids(self) -> jax.Array:
-        """(capacity,) int32 row id per token slot; num_rows for padding."""
+        """(capacity,) int32 row id per token slot; NEG_SEG for padding."""
         slot = jnp.arange(self.capacity, dtype=jnp.int32)
         # searchsorted over offsets: row of each slot.
         seg = jnp.searchsorted(self.offsets, slot, side="right") - 1
-        return jnp.where(slot < self.total(), seg, self.num_rows)
+        return jnp.where(slot < self.total(), seg, NEG_SEG)
 
     def positions(self) -> jax.Array:
         """(capacity,) int32 position-within-row per token slot (0 for pad)."""

@@ -1,2 +1,7 @@
-from repro.kernels.jagged_attention.ops import jagged_attention, make_attn_fn
+from repro.kernels.jagged_attention.ops import (JaggedAttnPlan,
+                                                PlannedAttention,
+                                                build_attn_plan,
+                                                jagged_attention,
+                                                make_attn_fn,
+                                                num_pairs_bound)
 from repro.kernels.jagged_attention.ref import jagged_attention_ref

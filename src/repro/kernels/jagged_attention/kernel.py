@@ -13,9 +13,8 @@ attention/RAB kernels. The TPU adaptation:
     touches only bq+bk−1 distinct relative distances, so one tiny
     one-hot matmul (255×npb) fetches all rows and 128 contiguous dynamic
     slices expand them to (bq, bk, H) — never a (bq·bk × npb) one-hot;
-  * fully-masked (cross-row or acausal) blocks are *skipped* via
-    `pl.when` on per-block segment ranges prefetched to SMEM — the
-    analogue of the paper's "operate only on valid data";
+  * fully-masked (cross-row or acausal) blocks never cost MXU work or DMA
+    traffic — the analogue of the paper's "operate only on valid data";
   * HSTU attention is softmax-free (SiLU(qkᵀ+rab)/n) → a single pass with
     fp32 VMEM accumulation, no running-max rescaling;
   * Pallas pipelines the HBM→VMEM block copies (the paper's asynchronous
@@ -24,6 +23,36 @@ attention/RAB kernels. The TPU adaptation:
 Backward follows the flash pattern: one k-major kernel for (dk, dv), one
 q-major kernel for dq + both RAB-table gradients (accumulated into
 constant-index outputs, safe because the TPU grid is sequential).
+
+Two schedules exist for each of the three kernels:
+
+``dense`` — grid (nb, nb): every q/k block pair is a grid step; dead pairs
+are suppressed with ``pl.when`` on per-block segment ranges in SMEM, but
+their HBM→VMEM copies are still issued, so DMA traffic and grid length are
+O(nb²) regardless of jaggedness. Kept as the on-device oracle / fallback.
+
+``worklist`` (default) — grid (P,): a 1-D grid over a *compacted work-list*
+of live (qb, kb) pairs built in traced code from ``offsets`` (see
+``ops.build_attn_plan``). The pair ids are scalar-prefetched to SMEM and
+every BlockSpec index map reads them data-dependently, so grid length, DMA
+traffic, and MXU work all scale with the number of *live* blocks, not
+capacity². Work-list layout and visit-flag protocol:
+
+  * the list is destination-ordered: q-block-major for the forward and dq
+    kernels, k-block-major for the dk/dv kernel, so each destination block
+    owns one contiguous (variable-length) run of grid steps;
+  * entries past the live count ``n_live`` (the list is padded to a static
+    bound) replicate the *last* live pair — consecutive identical block
+    ids cost no new DMA, the ``p < n_live`` guard skips their compute, and
+    the destination run simply extends through the tail;
+  * per-step ``(first, last)`` visit flags — computed over the padded list
+    by comparing neighbouring destinations — replace the dense grid's
+    ``j == 0`` accumulator reset and ``j == nb−1`` flush: the accumulator
+    zeroes on ``first`` and writes out on ``last``, which holds even for
+    the all-padding batch (the tail run writes zeros to block 0);
+  * destination blocks visited by no pair keep whatever was in the output
+    HBM buffer — callers mask outputs by the valid-token mask (pad slots
+    are defined to be zero, matching the oracles).
 """
 from __future__ import annotations
 
@@ -35,7 +64,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_SEG = -1  # segment id for padding slots
+from repro.core.jagged import NEG_SEG  # canonical padding segment id (-1)
 
 
 def _silu(x):
@@ -186,6 +215,34 @@ def _block_live(seg_rng_ref, i, j, bq, bk, causal):
 # forward
 # --------------------------------------------------------------------------
 
+def _fwd_block_compute(i0, j0, qmi_ref, qmf_ref, kmi_ref,
+                       q_ref, k_ref, v_ref, pt_ref, tt_ref, acc_ref, *,
+                       bq, bk, H, scale, npb, ntb, tb_scale,
+                       use_pos, use_time, causal, time_functional):
+    """Accumulate one (qb, kb) pair's contribution into acc_ref — shared by
+    the dense-grid and work-list forward kernels."""
+    qseg = qmi_ref[:, 0]
+    qts = qmi_ref[:, 2]
+    qninv = qmf_ref[:, 0]
+    kseg = kmi_ref[:, 0]
+    kts = kmi_ref[:, 2]
+    bias = _rab_block(pt_ref, tt_ref, i0, j0, qts, kts, bq, bk, H,
+                      npb, ntb, tb_scale, use_pos, use_time,
+                      time_functional)
+    mask = _mask_block(qseg, kseg, i0, j0, bq, bk, causal)
+    mw = mask.astype(jnp.float32) * qninv[:, None]
+    for h in range(H):
+        s = jax.lax.dot_general(
+            q_ref[:, h, :], k_ref[:, h, :],
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale + bias[:, :, h]
+        a = _silu(s) * mw
+        acc_ref[:, h, :] += jax.lax.dot_general(
+            a.astype(v_ref.dtype), v_ref[:, h, :],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
 def _fwd_kernel(seg_rng_ref,                      # scalar prefetch (nb, 2)
                 qmi_ref, qmf_ref, kmi_ref, kmf_ref,
                 q_ref, k_ref, v_ref, pt_ref, tt_ref,
@@ -200,29 +257,42 @@ def _fwd_kernel(seg_rng_ref,                      # scalar prefetch (nb, 2)
 
     @pl.when(_block_live(seg_rng_ref, i, j, bq, bk, causal))
     def _compute():
-        i0, j0 = i * bq, j * bk
-        qseg = qmi_ref[:, 0]
-        qts = qmi_ref[:, 2]
-        qninv = qmf_ref[:, 0]
-        kseg = kmi_ref[:, 0]
-        kts = kmi_ref[:, 2]
-        bias = _rab_block(pt_ref, tt_ref, i0, j0, qts, kts, bq, bk, H,
-                          npb, ntb, tb_scale, use_pos, use_time,
-                          time_functional)
-        mask = _mask_block(qseg, kseg, i0, j0, bq, bk, causal)
-        mw = mask.astype(jnp.float32) * qninv[:, None]
-        for h in range(H):
-            s = jax.lax.dot_general(
-                q_ref[:, h, :], k_ref[:, h, :],
-                dimension_numbers=(((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32) * scale + bias[:, :, h]
-            a = _silu(s) * mw
-            acc_ref[:, h, :] += jax.lax.dot_general(
-                a.astype(v_ref.dtype), v_ref[:, h, :],
-                dimension_numbers=(((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)
+        _fwd_block_compute(i * bq, j * bk, qmi_ref, qmf_ref, kmi_ref,
+                           q_ref, k_ref, v_ref, pt_ref, tt_ref, acc_ref,
+                           bq=bq, bk=bk, H=H, scale=scale, npb=npb,
+                           ntb=ntb, tb_scale=tb_scale, use_pos=use_pos,
+                           use_time=use_time, causal=causal,
+                           time_functional=time_functional)
 
     @pl.when(j == nkb - 1)
+    def _write():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def _fwd_kernel_wl(wq_ref, wk_ref, flg_ref, nlive_ref,    # scalar prefetch
+                   qmi_ref, qmf_ref, kmi_ref, kmf_ref,
+                   q_ref, k_ref, v_ref, pt_ref, tt_ref,
+                   out_ref, acc_ref, *,
+                   bq, bk, H, D, scale, npb, ntb, tb_scale,
+                   use_pos, use_time, causal, time_functional=False):
+    """Work-list forward: grid (P,) over live (qb, kb) pairs, q-major."""
+    p = pl.program_id(0)
+
+    @pl.when(flg_ref[p, 0] == 1)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(p < nlive_ref[0])
+    def _compute():
+        _fwd_block_compute(wq_ref[p] * bq, wk_ref[p] * bk,
+                           qmi_ref, qmf_ref, kmi_ref,
+                           q_ref, k_ref, v_ref, pt_ref, tt_ref, acc_ref,
+                           bq=bq, bk=bk, H=H, scale=scale, npb=npb,
+                           ntb=ntb, tb_scale=tb_scale, use_pos=use_pos,
+                           use_time=use_time, causal=causal,
+                           time_functional=time_functional)
+
+    @pl.when(flg_ref[p, 1] == 1)
     def _write():
         out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
@@ -269,6 +339,57 @@ def fwd_pallas(q, k, v, pos_table, time_table, meta_i32, meta_f32, seg_rng,
       pos_table, time_table)
 
 
+def fwd_pallas_wl(q, k, v, pos_table, time_table, meta_i32, meta_f32,
+                  wq, wk, flags, n_live,
+                  *, block: int, scale: float, tb_scale: float,
+                  use_pos: bool, use_time: bool, causal: bool = True,
+                  time_functional: bool = False, interpret: bool = False):
+    """Forward over a compacted work-list (wq, wk): (P,) int32 pair ids,
+    flags (P, 2) int32 first/last-visit markers, n_live (1,) int32."""
+    cap, H, D = q.shape
+    npb = pos_table.shape[0]
+    ntb = time_table.shape[0]
+    assert cap % block == 0
+    bq = bk = block
+    P = wq.shape[0]
+
+    kern = functools.partial(
+        _fwd_kernel_wl, bq=bq, bk=bk, H=H, D=D, scale=scale,
+        npb=npb, ntb=ntb, tb_scale=tb_scale,
+        use_pos=use_pos, use_time=use_time, causal=causal,
+        time_functional=time_functional)
+
+    def at_q(p, wq, wk, flg, nl):
+        return (wq[p], 0)
+
+    def at_k(p, wq, wk, flg, nl):
+        return (wk[p], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(P,),
+        in_specs=[
+            pl.BlockSpec((bq, 3), at_q),                       # q meta i32
+            pl.BlockSpec((bq, 1), at_q),                       # q meta f32
+            pl.BlockSpec((bk, 3), at_k),                       # k meta i32
+            pl.BlockSpec((bk, 1), at_k),                       # k meta f32
+            pl.BlockSpec((bq, H, D), lambda p, wq, *_: (wq[p], 0, 0)),
+            pl.BlockSpec((bk, H, D), lambda p, wq, wk, *_: (wk[p], 0, 0)),
+            pl.BlockSpec((bk, H, D), lambda p, wq, wk, *_: (wk[p], 0, 0)),
+            pl.BlockSpec((npb, H), lambda p, *_: (0, 0)),
+            pl.BlockSpec((ntb, H), lambda p, *_: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, H, D), lambda p, wq, *_: (wq[p], 0, 0)),
+        scratch_shapes=[pltpu.VMEM((bq, H, D), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((cap, H, D), v.dtype),
+        interpret=interpret,
+    )(wq, wk, flags, n_live, meta_i32, meta_f32, meta_i32, meta_f32,
+      q, k, v, pos_table, time_table)
+
+
 # --------------------------------------------------------------------------
 # backward — shared ds recompute
 # --------------------------------------------------------------------------
@@ -307,6 +428,28 @@ def _recompute_block(q_ref, k_ref, v_ref, dy_ref, pt_ref, tt_ref,
     return a_all, ds_all
 
 
+def _kv_block_compute(i0, j0, qmi_ref, qmf_ref, kmi_ref,
+                      k_ref, v_ref, q_ref, dy_ref, pt_ref, tt_ref,
+                      dk_acc, dv_acc, *,
+                      bq, bk, H, scale, npb, ntb, tb_scale,
+                      use_pos, use_time, causal, time_functional):
+    """Accumulate one pair's (dk, dv) contribution. i0/j0: q/k origins."""
+    a_all, ds_all = _recompute_block(
+        q_ref, k_ref, v_ref, dy_ref, pt_ref, tt_ref,
+        qmi_ref[...], qmf_ref[...], kmi_ref[...],
+        i0, j0, bq, bk, H, scale, npb, ntb, tb_scale,
+        use_pos, use_time, causal, time_functional)
+    for h in range(H):
+        dv_acc[:, h, :] += jax.lax.dot_general(
+            a_all[h], dy_ref[:, h, :],
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dk_acc[:, h, :] += jax.lax.dot_general(
+            ds_all[h], q_ref[:, h, :],
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+
+
 def _bwd_kv_kernel(seg_rng_ref,
                    kmi_ref, kmf_ref, qmi_ref, qmf_ref,
                    k_ref, v_ref, q_ref, dy_ref, pt_ref, tt_ref,
@@ -323,26 +466,92 @@ def _bwd_kv_kernel(seg_rng_ref,
 
     @pl.when(_block_live(seg_rng_ref, j, i, bq, bk, causal))
     def _compute():
-        i0, j0 = j * bq, i * bk                  # q origin, k origin
-        a_all, ds_all = _recompute_block(
-            q_ref, k_ref, v_ref, dy_ref, pt_ref, tt_ref,
-            qmi_ref[...], qmf_ref[...], kmi_ref[...],
-            i0, j0, bq, bk, H, scale, npb, ntb, tb_scale,
-            use_pos, use_time, causal, time_functional)
-        for h in range(H):
-            dv_acc[:, h, :] += jax.lax.dot_general(
-                a_all[h], dy_ref[:, h, :],
-                dimension_numbers=(((0,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)
-            dk_acc[:, h, :] += jax.lax.dot_general(
-                ds_all[h], q_ref[:, h, :],
-                dimension_numbers=(((0,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32) * scale
+        _kv_block_compute(j * bq, i * bk, qmi_ref, qmf_ref, kmi_ref,
+                          k_ref, v_ref, q_ref, dy_ref, pt_ref, tt_ref,
+                          dk_acc, dv_acc, bq=bq, bk=bk, H=H, scale=scale,
+                          npb=npb, ntb=ntb, tb_scale=tb_scale,
+                          use_pos=use_pos, use_time=use_time, causal=causal,
+                          time_functional=time_functional)
 
     @pl.when(j == nqb - 1)
     def _write():
         dk_ref[...] = dk_acc[...].astype(dk_ref.dtype)
         dv_ref[...] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _bwd_kv_kernel_wl(wq_ref, wk_ref, flg_ref, nlive_ref,
+                      kmi_ref, kmf_ref, qmi_ref, qmf_ref,
+                      k_ref, v_ref, q_ref, dy_ref, pt_ref, tt_ref,
+                      dk_ref, dv_ref, dk_acc, dv_acc, *,
+                      bq, bk, H, D, scale, npb, ntb, tb_scale,
+                      use_pos, use_time, causal, time_functional=False):
+    """Work-list (dk, dv): grid (P,) over live pairs sorted k-block-major;
+    flags mark the first/last visit of each k-block run."""
+    p = pl.program_id(0)
+
+    @pl.when(flg_ref[p, 0] == 1)
+    def _zero():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    @pl.when(p < nlive_ref[0])
+    def _compute():
+        _kv_block_compute(wq_ref[p] * bq, wk_ref[p] * bk,
+                          qmi_ref, qmf_ref, kmi_ref,
+                          k_ref, v_ref, q_ref, dy_ref, pt_ref, tt_ref,
+                          dk_acc, dv_acc, bq=bq, bk=bk, H=H, scale=scale,
+                          npb=npb, ntb=ntb, tb_scale=tb_scale,
+                          use_pos=use_pos, use_time=use_time, causal=causal,
+                          time_functional=time_functional)
+
+    @pl.when(flg_ref[p, 1] == 1)
+    def _write():
+        dk_ref[...] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[...] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _q_block_compute(i0, j0, qmi_ref, qmf_ref, kmi_ref,
+                     q_ref, k_ref, v_ref, dy_ref, pt_ref, tt_ref,
+                     dq_acc, dpt_ref, dtt_ref, *,
+                     bq, bk, H, scale, npb, ntb, tb_scale,
+                     use_pos, use_time, causal, time_functional):
+    """Accumulate one pair's dq + RAB-table grad contributions."""
+    _, ds_all = _recompute_block(
+        q_ref, k_ref, v_ref, dy_ref, pt_ref, tt_ref,
+        qmi_ref[...], qmf_ref[...], kmi_ref[...],
+        i0, j0, bq, bk, H, scale, npb, ntb, tb_scale,
+        use_pos, use_time, causal, time_functional)
+    for h in range(H):
+        dq_acc[:, h, :] += jax.lax.dot_general(
+            ds_all[h], k_ref[:, h, :],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+    ds_stack = jnp.stack(ds_all, axis=-1)    # (bq, bk, H) fp32
+    if use_pos:
+        dsdiag = _collapse_diag(ds_stack, bq, bk, H)     # (ndiag, H)
+        ndiag = bq + bk - 1
+        t = jax.lax.broadcasted_iota(jnp.int32, (ndiag, 1), 0)
+        d = jnp.clip(i0 - j0 + (bq - 1) - t, 0, npb - 1)
+        buckets = jax.lax.broadcasted_iota(jnp.int32, (1, npb), 1)
+        onehot = (d == buckets).astype(jnp.float32)      # (ndiag, npb)
+        dpt_ref[...] += jax.lax.dot_general(
+            onehot, dsdiag, dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    if use_time:
+        qts = qmi_ref[:, 2]
+        kts = kmi_ref[:, 2]
+        if time_functional:
+            dtt_ref[...] += _functional_time_grads(tt_ref, qts, kts,
+                                                   ds_stack)
+        else:
+            tb = _time_buckets(qts, kts, ntb, tb_scale)  # (bq, bk)
+            buckets = jax.lax.broadcasted_iota(jnp.int32, (1, ntb), 1)
+            onehot_t = (tb.reshape(bq * bk, 1) ==
+                        buckets).astype(jnp.float32)
+            dtt_ref[...] += jax.lax.dot_general(
+                onehot_t, ds_stack.reshape(bq * bk, H),
+                dimension_numbers=(((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
 
 
 def _bwd_q_kernel(seg_rng_ref,
@@ -365,45 +574,50 @@ def _bwd_q_kernel(seg_rng_ref,
 
     @pl.when(_block_live(seg_rng_ref, i, j, bq, bk, causal))
     def _compute():
-        i0, j0 = i * bq, j * bk
-        _, ds_all = _recompute_block(
-            q_ref, k_ref, v_ref, dy_ref, pt_ref, tt_ref,
-            qmi_ref[...], qmf_ref[...], kmi_ref[...],
-            i0, j0, bq, bk, H, scale, npb, ntb, tb_scale,
-            use_pos, use_time, causal, time_functional)
-        for h in range(H):
-            dq_acc[:, h, :] += jax.lax.dot_general(
-                ds_all[h], k_ref[:, h, :],
-                dimension_numbers=(((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32) * scale
-        ds_stack = jnp.stack(ds_all, axis=-1)    # (bq, bk, H) fp32
-        if use_pos:
-            dsdiag = _collapse_diag(ds_stack, bq, bk, H)     # (ndiag, H)
-            ndiag = bq + bk - 1
-            t = jax.lax.broadcasted_iota(jnp.int32, (ndiag, 1), 0)
-            d = jnp.clip(i0 - j0 + (bq - 1) - t, 0, npb - 1)
-            buckets = jax.lax.broadcasted_iota(jnp.int32, (1, npb), 1)
-            onehot = (d == buckets).astype(jnp.float32)      # (ndiag, npb)
-            dpt_ref[...] += jax.lax.dot_general(
-                onehot, dsdiag, dimension_numbers=(((0,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)
-        if use_time:
-            qts = qmi_ref[:, 2]
-            kts = kmi_ref[:, 2]
-            if time_functional:
-                dtt_ref[...] += _functional_time_grads(tt_ref, qts, kts,
-                                                       ds_stack)
-            else:
-                tb = _time_buckets(qts, kts, ntb, tb_scale)  # (bq, bk)
-                buckets = jax.lax.broadcasted_iota(jnp.int32, (1, ntb), 1)
-                onehot_t = (tb.reshape(bq * bk, 1) ==
-                            buckets).astype(jnp.float32)
-                dtt_ref[...] += jax.lax.dot_general(
-                    onehot_t, ds_stack.reshape(bq * bk, H),
-                    dimension_numbers=(((0,), (0,)), ((), ())),
-                    preferred_element_type=jnp.float32)
+        _q_block_compute(i * bq, j * bk, qmi_ref, qmf_ref, kmi_ref,
+                         q_ref, k_ref, v_ref, dy_ref, pt_ref, tt_ref,
+                         dq_acc, dpt_ref, dtt_ref, bq=bq, bk=bk, H=H,
+                         scale=scale, npb=npb, ntb=ntb, tb_scale=tb_scale,
+                         use_pos=use_pos, use_time=use_time, causal=causal,
+                         time_functional=time_functional)
 
     @pl.when(j == nkb - 1)
+    def _write():
+        dq_ref[...] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def _bwd_q_kernel_wl(wq_ref, wk_ref, flg_ref, nlive_ref,
+                     qmi_ref, qmf_ref, kmi_ref, kmf_ref,
+                     q_ref, k_ref, v_ref, dy_ref, pt_ref, tt_ref,
+                     dq_ref, dpt_ref, dtt_ref, dq_acc, *,
+                     bq, bk, H, D, scale, npb, ntb, tb_scale,
+                     use_pos, use_time, causal, time_functional=False):
+    """Work-list dq + RAB-table grads: grid (P,), q-block-major (the same
+    list as the forward). The RAB-table outputs have constant index maps,
+    so their VMEM windows persist across the whole grid — zero at p == 0,
+    flush once at the end."""
+    p = pl.program_id(0)
+
+    @pl.when(flg_ref[p, 0] == 1)
+    def _zero_dq():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    @pl.when(p == 0)
+    def _zero_tables():
+        dpt_ref[...] = jnp.zeros_like(dpt_ref)
+        dtt_ref[...] = jnp.zeros_like(dtt_ref)
+
+    @pl.when(p < nlive_ref[0])
+    def _compute():
+        _q_block_compute(wq_ref[p] * bq, wk_ref[p] * bk,
+                         qmi_ref, qmf_ref, kmi_ref,
+                         q_ref, k_ref, v_ref, dy_ref, pt_ref, tt_ref,
+                         dq_acc, dpt_ref, dtt_ref, bq=bq, bk=bk, H=H,
+                         scale=scale, npb=npb, ntb=ntb, tb_scale=tb_scale,
+                         use_pos=use_pos, use_time=use_time, causal=causal,
+                         time_functional=time_functional)
+
+    @pl.when(flg_ref[p, 1] == 1)
     def _write():
         dq_ref[...] = dq_acc[...].astype(dq_ref.dtype)
 
@@ -488,4 +702,103 @@ def bwd_pallas(q, k, v, dy, pos_table, time_table, meta_i32, meta_f32,
         interpret=interpret,
     )(seg_rng, meta_i32, meta_f32, meta_i32, meta_f32, q, k, v, dy,
       pos_table, time_table)
+    return dq, dk, dv, dpt, dtt
+
+
+def bwd_pallas_wl(q, k, v, dy, pos_table, time_table, meta_i32, meta_f32,
+                  q_wl, q_flags, kv_wl, kv_flags, n_live,
+                  *, block: int, scale: float, tb_scale: float,
+                  use_pos: bool, use_time: bool, causal: bool = True,
+                  time_functional: bool = False, interpret: bool = False):
+    """Backward over compacted work-lists.
+
+    q_wl (P, 2): live pairs (qb, kb) in q-block-major order (the forward
+    list) with q_flags (P, 2) first/last per qb run — drives the dq kernel.
+    kv_wl (P, 2): the same pairs in k-block-major order with kv_flags per
+    kb run — drives the dk/dv kernel. n_live: (1,) int32.
+    """
+    cap, H, D = q.shape
+    npb = pos_table.shape[0]
+    ntb = time_table.shape[0]
+    bq = bk = block
+    P = q_wl.shape[0]
+    qi, qj = q_wl[:, 0], q_wl[:, 1]
+    kvi, kvj = kv_wl[:, 0], kv_wl[:, 1]
+
+    def at_q(p, wq, wk, flg, nl):
+        return (wq[p], 0)
+
+    def at_k(p, wq, wk, flg, nl):
+        return (wk[p], 0)
+
+    kv_kern = functools.partial(
+        _bwd_kv_kernel_wl, bq=bq, bk=bk, H=H, D=D, scale=scale,
+        npb=npb, ntb=ntb, tb_scale=tb_scale,
+        use_pos=use_pos, use_time=use_time, causal=causal,
+        time_functional=time_functional)
+    kv_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(P,),
+        in_specs=[
+            pl.BlockSpec((bk, 3), at_k),                        # k meta i32
+            pl.BlockSpec((bk, 1), at_k),                        # k meta f32
+            pl.BlockSpec((bq, 3), at_q),                        # q meta i32
+            pl.BlockSpec((bq, 1), at_q),                        # q meta f32
+            pl.BlockSpec((bk, H, D), lambda p, wq, wk, *_: (wk[p], 0, 0)),
+            pl.BlockSpec((bk, H, D), lambda p, wq, wk, *_: (wk[p], 0, 0)),
+            pl.BlockSpec((bq, H, D), lambda p, wq, *_: (wq[p], 0, 0)),
+            pl.BlockSpec((bq, H, D), lambda p, wq, *_: (wq[p], 0, 0)),
+            pl.BlockSpec((npb, H), lambda p, *_: (0, 0)),
+            pl.BlockSpec((ntb, H), lambda p, *_: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bk, H, D), lambda p, wq, wk, *_: (wk[p], 0, 0)),
+            pl.BlockSpec((bk, H, D), lambda p, wq, wk, *_: (wk[p], 0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((bk, H, D), jnp.float32),
+                        pltpu.VMEM((bk, H, D), jnp.float32)],
+    )
+    dk, dv = pl.pallas_call(
+        kv_kern, grid_spec=kv_spec,
+        out_shape=[jax.ShapeDtypeStruct((cap, H, D), k.dtype),
+                   jax.ShapeDtypeStruct((cap, H, D), v.dtype)],
+        interpret=interpret,
+    )(kvi, kvj, kv_flags, n_live, meta_i32, meta_f32, meta_i32, meta_f32,
+      k, v, q, dy, pos_table, time_table)
+
+    q_kern = functools.partial(
+        _bwd_q_kernel_wl, bq=bq, bk=bk, H=H, D=D, scale=scale,
+        npb=npb, ntb=ntb, tb_scale=tb_scale,
+        use_pos=use_pos, use_time=use_time, causal=causal,
+        time_functional=time_functional)
+    q_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(P,),
+        in_specs=[
+            pl.BlockSpec((bq, 3), at_q),
+            pl.BlockSpec((bq, 1), at_q),
+            pl.BlockSpec((bk, 3), at_k),
+            pl.BlockSpec((bk, 1), at_k),
+            pl.BlockSpec((bq, H, D), lambda p, wq, *_: (wq[p], 0, 0)),
+            pl.BlockSpec((bk, H, D), lambda p, wq, wk, *_: (wk[p], 0, 0)),
+            pl.BlockSpec((bk, H, D), lambda p, wq, wk, *_: (wk[p], 0, 0)),
+            pl.BlockSpec((bq, H, D), lambda p, wq, *_: (wq[p], 0, 0)),
+            pl.BlockSpec((npb, H), lambda p, *_: (0, 0)),
+            pl.BlockSpec((ntb, H), lambda p, *_: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, H, D), lambda p, wq, *_: (wq[p], 0, 0)),
+            pl.BlockSpec((npb, H), lambda p, *_: (0, 0)),
+            pl.BlockSpec((ntb, H), lambda p, *_: (0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((bq, H, D), jnp.float32)],
+    )
+    dq, dpt, dtt = pl.pallas_call(
+        q_kern, grid_spec=q_spec,
+        out_shape=[jax.ShapeDtypeStruct((cap, H, D), q.dtype),
+                   jax.ShapeDtypeStruct((npb, H), jnp.float32),
+                   jax.ShapeDtypeStruct((ntb, H), jnp.float32)],
+        interpret=interpret,
+    )(qi, qj, q_flags, n_live, meta_i32, meta_f32, meta_i32, meta_f32,
+      q, k, v, dy, pos_table, time_table)
     return dq, dk, dv, dpt, dtt

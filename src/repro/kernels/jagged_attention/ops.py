@@ -1,20 +1,34 @@
 """jit'd wrapper for the fused jagged attention+RAB kernel.
 
 Public entry :func:`jagged_attention` is drop-in compatible with the model's
-``attn_fn`` signature (models/hstu.py), computes the per-token jagged
-metadata + per-block segment ranges, pads the capacity to the block size,
-and differentiates through a custom VJP backed by the two backward kernels.
+``attn_fn`` signature (models/hstu.py), differentiates through a custom VJP
+backed by the two backward kernels, and runs one of two schedules:
+
+  * ``"worklist"`` (default) — a 1-D grid over the compacted live
+    (q-block, k-block) pair list, so grid length and DMA traffic scale
+    with the jagged batch's *live* blocks (paper §4.1 "operate only on
+    valid data"); see :func:`build_attn_plan`;
+  * ``"dense"`` — the original (nb, nb) grid with `pl.when` suppression,
+    kept as the on-device oracle / fallback.
+
+All per-call metadata (token meta, per-block segment ranges, both
+destination-ordered work-lists) lives in a :class:`JaggedAttnPlan`. The
+plan depends only on (offsets, timestamps, capacity, block, causal), so a
+model stack builds it **once per step** and threads the same plan through
+every layer (models/gr.py) instead of recomputing it per layer.
 """
 from __future__ import annotations
 
 import functools
 import math
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import RABConfig
+from repro.core.jagged import NEG_SEG
 from repro.kernels.jagged_attention import kernel as K
 
 
@@ -32,7 +46,7 @@ def _token_meta(cap: int, offsets: jax.Array, timestamps: jax.Array):
     pos = slot - offsets[segc]
     lengths = offsets[1:] - offsets[:-1]
     n = jnp.maximum(lengths[segc], 1).astype(jnp.float32)
-    seg = jnp.where(valid, seg, K.NEG_SEG)
+    seg = jnp.where(valid, seg, NEG_SEG)
     pos = jnp.where(valid, pos, 0)
     ninv = jnp.where(valid, 1.0 / n, 0.0)
     ts = timestamps.astype(jnp.int32)
@@ -51,11 +65,170 @@ def _seg_ranges(seg: jax.Array, nb: int, block: int) -> jax.Array:
     return jnp.stack([lo, hi], axis=1).astype(jnp.int32)
 
 
+# --------------------------------------------------------------------------
+# work-list construction (traced)
+# --------------------------------------------------------------------------
+
+def _live_block_matrix(seg_rng: jax.Array, block: int,
+                       causal: bool) -> jax.Array:
+    """(nb, nb) bool [qb, kb]: does the pair contain any live token pair?
+
+    Exact, not conservative: packed segments are contiguous, so two blocks
+    whose [lo, hi] seg ranges intersect share an actual segment, and the
+    block-level causal band (i+1)·b−1 ≥ j·b implies i ≥ j, where a live
+    same-segment (q ≥ k) slot pair always exists. Matches the dense
+    kernels' ``_block_live`` SMEM test block-for-block.
+    """
+    nb = seg_rng.shape[0]
+    lo, hi = seg_rng[:, 0], seg_rng[:, 1]
+    live = ((lo[:, None] <= hi[None, :]) & (lo[None, :] <= hi[:, None])
+            & (hi[:, None] >= 0) & (hi[None, :] >= 0))
+    if causal:
+        i = jnp.arange(nb, dtype=jnp.int32)
+        live &= ((i[:, None] + 1) * block - 1) >= (i[None, :] * block)
+    return live
+
+
+def _compact_worklist(live: jax.Array, n_pairs: int, *,
+                      kv_major: bool = False):
+    """Compact a live matrix into ((P, 2) pairs, (P, 2) flags).
+
+    Pairs are (qb, kb), destination-major: row-major over ``live[q, k]``
+    (q-major) or over its transpose (k-major, ``kv_major=True``). Entries
+    past the live count replicate the last live pair, so the destination
+    id is nondecreasing over the whole padded list and the final run
+    extends through the tail (the visit-flag protocol in kernel.py).
+    flags[:, 0]/[:, 1] mark the first/last step of each destination run.
+    """
+    nb = live.shape[0]
+    flat = (live.T if kv_major else live).reshape(-1)
+    order = jnp.argsort(jnp.logical_not(flat), stable=True).astype(jnp.int32)
+    n_live = jnp.sum(flat.astype(jnp.int32))
+    idx = order[:n_pairs]
+    last = order[jnp.maximum(n_live - 1, 0)]
+    pos = jnp.arange(n_pairs, dtype=jnp.int32)
+    v = jnp.where(pos < n_live, idx, last)
+    major, minor = v // nb, v % nb
+    pairs = (jnp.stack([minor, major], axis=1) if kv_major
+             else jnp.stack([major, minor], axis=1))
+    dest = major
+    first = jnp.concatenate([jnp.ones((1,), bool), dest[1:] != dest[:-1]])
+    lastf = jnp.concatenate([dest[1:] != dest[:-1], jnp.ones((1,), bool)])
+    flags = jnp.stack([first, lastf], axis=1).astype(jnp.int32)
+    return pairs, flags, n_live
+
+
+def num_pairs_bound(nb: int, block: int, num_rows: int,
+                    max_row_len: Optional[int], causal: bool) -> int:
+    """Static worst-case live-pair count.
+
+    With a per-row length bound a row straddles at most
+    mr = ceil(max_row_len/block)+1 blocks and contributes at most
+    mr·(mr+1)/2 causal pairs (mr² acausal); rows never share pairs across
+    segments, so num_rows·per_row bounds the total. Without a hint only
+    the dense (causal) bound is safe.
+    """
+    dense = nb * (nb + 1) // 2 if causal else nb * nb
+    if max_row_len is None:
+        return max(1, dense)
+    mr = min(-(-max_row_len // block) + 1, nb)
+    per_row = mr * (mr + 1) // 2 if causal else mr * mr
+    return max(1, min(num_rows * per_row, dense))
+
+
+class JaggedAttnPlan(NamedTuple):
+    """Per-step attention metadata, built once and reused by every layer.
+
+    All fields are arrays (the plan is a plain pytree); static facts are
+    recovered from shapes: capacity = meta_i32.shape[0], nb =
+    seg_rng.shape[0], block = capacity // nb, P = q_wl.shape[0].
+
+    The work-lists enumerate exactly the live (qb, kb) block pairs:
+    ``q_wl`` q-block-major (forward + dq kernels), ``kv_wl`` k-block-major
+    (dk/dv kernel), each with (P, 2) first/last visit flags; ``n_live``
+    (shape (1,)) counts the real entries — the tail replicates the last
+    live pair. Rows longer than the ``max_row_len`` the plan was built
+    with would overflow the static list and silently drop pairs; callers
+    own that contract (the model passes cfg.max_seq_len).
+    """
+    meta_i32: jax.Array     # (capacity, 3) int32: seg / pos / ts
+    meta_f32: jax.Array     # (capacity, 1) f32: 1/n_row
+    seg_rng: jax.Array      # (nb, 2) int32 per-block segment ranges
+    q_wl: jax.Array         # (P, 2) int32 (qb, kb), q-block-major
+    q_flags: jax.Array      # (P, 2) int32 first/last of each qb run
+    kv_wl: jax.Array        # (P, 2) int32 (qb, kb), k-block-major
+    kv_flags: jax.Array     # (P, 2) int32 first/last of each kb run
+    n_live: jax.Array       # (1,) int32 live-pair count
+
+    @property
+    def capacity(self) -> int:
+        return self.meta_i32.shape[0]
+
+    @property
+    def num_blocks(self) -> int:
+        return self.seg_rng.shape[0]
+
+    @property
+    def block(self) -> int:
+        return self.capacity // self.num_blocks
+
+    @property
+    def num_pairs(self) -> int:
+        """Static work-list length == the 1-D grid length."""
+        return self.q_wl.shape[0]
+
+
+def build_attn_plan(offsets: jax.Array, timestamps: jax.Array,
+                    capacity: int, *, block: int = 128,
+                    causal: bool = True,
+                    max_row_len: Optional[int] = None,
+                    worklists: bool = True) -> JaggedAttnPlan:
+    """Build the per-step plan from the jagged structure (traced code).
+
+    ``capacity`` may be any size ≥ offsets[-1]; it is padded up to a block
+    multiple internally (matching :func:`jagged_attention`'s padding).
+    ``max_row_len`` (static) tightens the work-list bound from the dense
+    O(nb²) grid to O(num_rows · blocks_per_row²) — pass the loader's
+    max sequence length; rows must not exceed it. ``worklists=False``
+    skips the two argsort compactions and emits (1,)-dummy lists — for
+    the dense schedule only, which never reads them.
+    """
+    pad = (-capacity) % block
+    capp = capacity + pad
+    if pad:
+        timestamps = jnp.concatenate(
+            [timestamps, jnp.zeros((pad,), timestamps.dtype)])
+    meta_i32, meta_f32 = _token_meta(capp, offsets, timestamps)
+    nb = capp // block
+    seg_rng = _seg_ranges(meta_i32[:, 0], nb, block)
+    if not worklists:
+        z = jnp.zeros((1, 2), jnp.int32)
+        return JaggedAttnPlan(meta_i32=meta_i32, meta_f32=meta_f32,
+                              seg_rng=seg_rng, q_wl=z, q_flags=z,
+                              kv_wl=z, kv_flags=z,
+                              n_live=jnp.zeros((1,), jnp.int32))
+    live = _live_block_matrix(seg_rng, block, causal)
+    P = num_pairs_bound(nb, block, offsets.shape[0] - 1, max_row_len, causal)
+    q_wl, q_flags, n_live = _compact_worklist(live, P)
+    kv_wl, kv_flags, _ = _compact_worklist(live, P, kv_major=True)
+    return JaggedAttnPlan(meta_i32=meta_i32, meta_f32=meta_f32,
+                          seg_rng=seg_rng, q_wl=q_wl, q_flags=q_flags,
+                          kv_wl=kv_wl, kv_flags=kv_flags,
+                          n_live=n_live.reshape(1))
+
+
+# --------------------------------------------------------------------------
+# public entry
+# --------------------------------------------------------------------------
+
 def jagged_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      offsets: jax.Array, timestamps: jax.Array,
                      rab_params, rab: Optional[RABConfig],
                      *, time_mode: str = "bucket", causal: bool = True,
                      block: int = 128,
+                     plan: Optional[JaggedAttnPlan] = None,
+                     schedule: str = "worklist",
+                     max_row_len: Optional[int] = None,
                      interpret: Optional[bool] = None) -> jax.Array:
     """Fused jagged pointwise attention + RAB. q,k,v: (cap, H, D).
 
@@ -63,9 +236,18 @@ def jagged_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     uses FuXi-γ's exponential-power encoder computed elementwise in-kernel
     (amp/σ/ρ packed as a (3, H) table; the raw-parameter transforms stay
     in traced code outside the custom_vjp so their chain rule composes).
+
+    ``plan`` reuses a :func:`build_attn_plan` result — it must match
+    capacity and block (checked) *and* have been built with the same
+    ``causal`` (not recorded in the plan, so not checkable: a causal
+    mismatch would silently drop live pairs); when None a private plan is
+    built per call. ``schedule`` picks the work-list grid (default) or
+    the dense (nb, nb) grid oracle.
     """
     if time_mode not in ("bucket", "functional"):
         raise NotImplementedError(time_mode)
+    if schedule not in ("worklist", "dense"):
+        raise ValueError(f"unknown schedule {schedule!r}")
     interpret = default_interpret() if interpret is None else interpret
     cap, H, D = q.shape
     assert v.shape == q.shape == k.shape, (q.shape, k.shape, v.shape)
@@ -96,42 +278,150 @@ def jagged_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     if pad:
         zpad = jnp.zeros((pad, H, D), q.dtype)
         q, k, v = (jnp.concatenate([t, zpad], 0) for t in (q, k, v))
-        timestamps = jnp.concatenate(
-            [timestamps, jnp.zeros((pad,), timestamps.dtype)])
     capp = cap + pad
-    meta_i32, meta_f32 = _token_meta(capp, offsets, timestamps)
-    seg_rng = _seg_ranges(meta_i32[:, 0], capp // block, block)
+    if plan is None:
+        plan = build_attn_plan(offsets, timestamps, cap, block=block,
+                               causal=causal, max_row_len=max_row_len,
+                               worklists=schedule == "worklist")
+    if plan.capacity != capp or plan.block != block:
+        raise ValueError(
+            f"plan (capacity={plan.capacity}, block={plan.block}) does not "
+            f"match call (capacity={capp}, block={block})")
 
     kw = dict(block=block, scale=scale, tb_scale=tb_scale,
               use_pos=use_pos, use_time=use_time, causal=causal,
               time_functional=functional, interpret=interpret)
 
-    @jax.custom_vjp
-    def _attn(q, k, v, pt, tt):
-        return K.fwd_pallas(q, k, v, pt, tt, meta_i32, meta_f32,
-                            seg_rng, **kw)
-
-    def _fwd(q, k, v, pt, tt):
-        return _attn(q, k, v, pt, tt), (q, k, v, pt, tt)
-
-    def _bwd(res, dy):
-        q, k, v, pt, tt = res
-        dq, dk, dv, dpt, dtt = K.bwd_pallas(
-            q, k, v, dy, pt, tt, meta_i32, meta_f32, seg_rng, **kw)
-        if not use_pos:
-            dpt = jnp.zeros_like(pt)
-        if not use_time:
-            dtt = jnp.zeros_like(tt)
-        return dq, dk, dv, dpt, dtt
-
-    _attn.defvjp(_fwd, _bwd)
-    out = _attn(q, k, v, pt, tt)
+    out = _attn_vjp(q, k, v, pt, tt, plan, schedule=schedule, **kw)
     if pad:
         out = out[:cap]
     return out
 
 
-def make_attn_fn(*, block: int = 128, interpret: Optional[bool] = None):
+def _masked(meta_i32, *arrays):
+    # Destination blocks with no live pair are never visited by the
+    # work-list grid, so their HBM windows keep stale memory (possibly
+    # NaN) — pad slots are *defined* by masking every kernel output with
+    # the valid-token mask via `where` (zeros there, matching the
+    # oracles; no-op for the dense grid).
+    valid = (meta_i32[:, 0] >= 0)[:, None, None]
+    outs = tuple(jnp.where(valid, a, jnp.zeros((), a.dtype))
+                 for a in arrays)
+    return outs[0] if len(outs) == 1 else outs
+
+
+def _zero_cotangent(x):
+    """float0 for integer plan fields, real zeros for inexact ones."""
+    if jnp.issubdtype(x.dtype, jnp.inexact):
+        return jnp.zeros_like(x)
+    return np.zeros(x.shape, jax.dtypes.float0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _attn_core(q, k, v, pt, tt, plan, static):
+    """The plan rides along as a differentiable-signature argument (zero /
+    float0 cotangents) rather than a closure: closed-over batch tracers
+    would leak when the VJP runs under vmap (gr_hidden_sharded)."""
+    schedule = static["schedule"]
+    kw = {k2: v2 for k2, v2 in static.items() if k2 != "schedule"}
+    if schedule == "dense":
+        raw = K.fwd_pallas(q, k, v, pt, tt, plan.meta_i32, plan.meta_f32,
+                           plan.seg_rng, **kw)
+    else:
+        raw = K.fwd_pallas_wl(q, k, v, pt, tt, plan.meta_i32, plan.meta_f32,
+                              plan.q_wl[:, 0], plan.q_wl[:, 1],
+                              plan.q_flags, plan.n_live, **kw)
+    return _masked(plan.meta_i32, raw)
+
+
+def _attn_core_fwd(q, k, v, pt, tt, plan, static):
+    return _attn_core(q, k, v, pt, tt, plan, static), (q, k, v, pt, tt, plan)
+
+
+def _attn_core_bwd(static, res, dy):
+    q, k, v, pt, tt, plan = res
+    schedule = static["schedule"]
+    kw = {k2: v2 for k2, v2 in static.items() if k2 != "schedule"}
+    dy = _masked(plan.meta_i32, dy)
+    if schedule == "dense":
+        dq, dk, dv, dpt, dtt = K.bwd_pallas(
+            q, k, v, dy, pt, tt, plan.meta_i32, plan.meta_f32,
+            plan.seg_rng, **kw)
+    else:
+        dq, dk, dv, dpt, dtt = K.bwd_pallas_wl(
+            q, k, v, dy, pt, tt, plan.meta_i32, plan.meta_f32,
+            plan.q_wl, plan.q_flags, plan.kv_wl, plan.kv_flags,
+            plan.n_live, **kw)
+    dq, dk, dv = _masked(plan.meta_i32, dq, dk, dv)
+    if not kw["use_pos"]:
+        dpt = jnp.zeros_like(pt)
+    if not kw["use_time"]:
+        dtt = jnp.zeros_like(tt)
+    dplan = jax.tree.map(_zero_cotangent, plan)
+    return dq, dk, dv, dpt, dtt, dplan
+
+
+_attn_core.defvjp(_attn_core_fwd, _attn_core_bwd)
+
+
+def _attn_vjp(q, k, v, pt, tt, plan, *, schedule, **kw):
+    # dict is unhashable → freeze the static config for nondiff_argnums
+    static = _FrozenKw(schedule=schedule, **kw)
+    return _attn_core(q, k, v, pt, tt, plan, static)
+
+
+class _FrozenKw(dict):
+    """Hashable static-config dict for custom_vjp nondiff_argnums."""
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self._key = tuple(sorted(kw.items()))
+
+    def __hash__(self):
+        return hash(self._key)
+
+    def __eq__(self, other):
+        return isinstance(other, _FrozenKw) and self._key == other._key
+
+
+# --------------------------------------------------------------------------
+# attn_fn factory — plan-aware callable for the model stack
+# --------------------------------------------------------------------------
+
+class PlannedAttention:
+    """attn_fn with one-per-step planning (models/gr.py detects
+    ``make_plan`` and builds the plan once, outside the layer scan)."""
+
+    def __init__(self, *, block: int = 128, schedule: str = "worklist",
+                 causal: bool = True, max_row_len: Optional[int] = None,
+                 interpret: Optional[bool] = None):
+        self.block = block
+        self.schedule = schedule
+        self.causal = causal
+        self.max_row_len = max_row_len
+        self.interpret = interpret
+
+    def make_plan(self, offsets: jax.Array, timestamps: jax.Array,
+                  capacity: int) -> JaggedAttnPlan:
+        return build_attn_plan(offsets, timestamps, capacity,
+                               block=self.block, causal=self.causal,
+                               max_row_len=self.max_row_len)
+
+    def __call__(self, q, k, v, offsets, timestamps, rab_params, rab, *,
+                 time_mode: str = "bucket",
+                 plan: Optional[JaggedAttnPlan] = None) -> jax.Array:
+        # no per-call causal override: the plan's work-lists are built
+        # with self.causal, and a mismatch would silently drop live pairs
+        return jagged_attention(
+            q, k, v, offsets, timestamps, rab_params, rab,
+            time_mode=time_mode, causal=self.causal,
+            block=self.block, plan=plan, schedule=self.schedule,
+            max_row_len=self.max_row_len, interpret=self.interpret)
+
+
+def make_attn_fn(*, block: int = 128, schedule: str = "worklist",
+                 max_row_len: Optional[int] = None,
+                 interpret: Optional[bool] = None) -> PlannedAttention:
     """attn_fn factory for models.hstu.hstu_block(attn_fn=...)."""
-    return functools.partial(jagged_attention, block=block,
-                             interpret=interpret)
+    return PlannedAttention(block=block, schedule=schedule,
+                            max_row_len=max_row_len, interpret=interpret)

@@ -92,7 +92,9 @@ def main():
     attn_fn = None
     if args.use_kernel:
         from repro.kernels.jagged_attention import make_attn_fn
-        attn_fn = make_attn_fn(block=128)
+        # max_row_len bounds the work-list grid: rows come from the loader
+        # capped at max_seq_len, so live pairs scale with rows, not cap².
+        attn_fn = make_attn_fn(block=128, max_row_len=args.max_seq_len)
 
     loss_fn = lambda d, t, b: bundle.loss(
         d, t, b, neg_mode=args.neg_mode, expansion=args.expansion,

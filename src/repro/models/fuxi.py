@@ -50,10 +50,10 @@ def init_fuxi_block(key, cfg: ArchConfig, dtype) -> Params:
 
 def fuxi_block(p: Params, cfg: ArchConfig, x: jax.Array,
                offsets: jax.Array, timestamps: jax.Array,
-               *, attn_fn=None) -> jax.Array:
+               *, attn_fn=None, plan=None) -> jax.Array:
     """One FuXi block over packed tokens x: (cap, d)."""
     x = hstu_block(p, cfg, x, offsets, timestamps,
-                   attn_fn=attn_fn, time_mode="functional")
+                   attn_fn=attn_fn, time_mode="functional", plan=plan)
     h = _block_norm(x, p["ffn_ln_w"], p["ffn_ln_b"], cfg.norm_eps)
     ff = (_silu(h @ p["ffn_w_gate"]) * (h @ p["ffn_w_in"])) @ p["ffn_w_out"]
     return x + ff

@@ -9,6 +9,13 @@ separate pipeline stages/streams).
 Multi-device layout: the global batch is ``(G, cap, ...)`` with G = number
 of data shards (one jagged pack per device, built by the load balancer
 §4.1.3) and the per-shard model vmapped over G.
+
+Attention planning: when the attn_fn is plan-aware (exposes ``make_plan``,
+e.g. the Pallas work-list kernel's PlannedAttention), :func:`gr_hidden`
+builds one ``JaggedAttnPlan`` per step — token metadata + compacted live
+block-pair work-lists — and threads the same plan through every layer,
+instead of each layer recomputing it. On TPU the Pallas kernel is the
+default attn_fn; elsewhere the XLA blocked scan remains the default.
 """
 from __future__ import annotations
 
@@ -19,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.kernels.jagged_attention import ops as attn_ops
 from repro.models.fuxi import fuxi_block, init_fuxi_block
 from repro.models.hstu import hstu_block, init_hstu_block
 from repro.models.sasrec import init_sasrec_block, sasrec_block
@@ -30,6 +38,18 @@ _BLOCKS = {
     "fuxi": (init_fuxi_block, fuxi_block),
     "sasrec": (init_sasrec_block, sasrec_block),
 }
+
+
+def default_attn_fn(cfg: ArchConfig) -> Optional[Callable]:
+    """TPU → the Pallas work-list kernel (max_row_len = cfg.max_seq_len
+    bounds the work-list); elsewhere None (the blocks fall back to the XLA
+    blocked scan). SASRec inlines its own softmax attention."""
+    if cfg.gr_block == "sasrec":
+        return None
+    if jax.default_backend() == "tpu":
+        return attn_ops.PlannedAttention(block=128,
+                                         max_row_len=cfg.max_seq_len)
+    return None
 
 
 def init_gr(key, cfg: ArchConfig, dtype=None) -> Params:
@@ -48,10 +68,18 @@ def gr_hidden(params: Params, cfg: ArchConfig, x: jax.Array,
               remat: bool = True) -> jax.Array:
     """x: (cap, d) packed embeddings → (cap, d) hidden states."""
     block_fn = _BLOCKS[cfg.gr_block or "hstu"][1]
+    if attn_fn is None:
+        attn_fn = default_attn_fn(cfg)
+
+    # one-per-step attention planning: build the jagged metadata +
+    # work-lists once, outside the layer scan, and reuse across layers
+    plan = None
+    if attn_fn is not None and hasattr(attn_fn, "make_plan"):
+        plan = attn_fn.make_plan(offsets, timestamps, x.shape[0])
 
     def body(x, bp):
         f = lambda x_: block_fn(bp, cfg, x_, offsets, timestamps,
-                                attn_fn=attn_fn)
+                                attn_fn=attn_fn, plan=plan)
         if remat:
             f = jax.checkpoint(f, policy=jax.checkpoint_policies.nothing_saveable)
         return f(x), None

@@ -247,8 +247,14 @@ def _block_norm(x: jax.Array, w, b, eps: float) -> jax.Array:
 
 def hstu_block(p: Params, cfg: ArchConfig, x: jax.Array,
                offsets: jax.Array, timestamps: jax.Array,
-               *, attn_fn=None, time_mode: str = "bucket") -> jax.Array:
-    """One HSTU block over packed tokens x: (cap, d)."""
+               *, attn_fn=None, time_mode: str = "bucket",
+               plan=None) -> jax.Array:
+    """One HSTU block over packed tokens x: (cap, d).
+
+    ``plan`` is an optional precomputed ``JaggedAttnPlan`` forwarded to a
+    plan-aware ``attn_fn`` (kernels.jagged_attention.PlannedAttention) so
+    the per-step metadata is built once, not once per layer.
+    """
     H = cfg.num_heads
     dqk = cfg.qkv_dim or cfg.resolved_head_dim
     dv = dqk
@@ -263,8 +269,9 @@ def hstu_block(p: Params, cfg: ArchConfig, x: jax.Array,
     v = v.reshape(cap, H, dv)
 
     attn_fn = attn_fn or partial(jagged_pointwise_attention_blocked, block=512)
+    kw = {"plan": plan} if plan is not None else {}
     y = attn_fn(q, k, v, offsets, timestamps, p["rab"],
-                cfg.rab, time_mode=time_mode)
+                cfg.rab, time_mode=time_mode, **kw)
 
     y = y.reshape(cap, H * dv)
     # non-affine layernorm on the attention output, gated by U (HSTU eq. Y)

@@ -138,6 +138,10 @@ class GRBundle:
                   "segmented" scans fixed-size segments with quantized
                   fetches (§4.3.1 + §4.3.2, logit tensors still in HBM).
         expansion: §4.3.3 intra-batch logit sharing factor k.
+        attn_fn: None dispatches per backend (models.gr.default_attn_fn):
+                 the Pallas work-list jagged-attention kernel on TPU with
+                 a JaggedAttnPlan built once per step and shared by all
+                 layers, the XLA blocked scan elsewhere.
         """
         cfg = self.cfg
         lookup = lookup_fn or (lambda t, i: jnp.take(t, i, axis=0)

@@ -52,9 +52,12 @@ def _ln(x, w, b, eps):
 
 def sasrec_block(p: Params, cfg: ArchConfig, x: jax.Array,
                  offsets: jax.Array, timestamps: jax.Array,
-                 *, attn_fn=None, time_mode: str = "none") -> jax.Array:
+                 *, attn_fn=None, time_mode: str = "none",
+                 plan=None) -> jax.Array:
     """One SASRec block over packed tokens x: (cap, d). ``timestamps`` are
-    accepted (substrate signature) but unused — SASRec is time-agnostic."""
+    accepted (substrate signature) but unused — SASRec is time-agnostic;
+    ``plan`` likewise (softmax attention here is inlined, not jagged-
+    kernel-backed)."""
     cap, d = x.shape
     H = cfg.num_heads
     hd = cfg.qkv_dim or (d // H)

@@ -1,0 +1,380 @@
+"""Work-list scheduling for the jagged attention megakernel.
+
+Covers the PR-2 acceptance criteria:
+  * the traced work-list builder enumerates *exactly* the live (qb, kb)
+    block pairs of the dense token mask (property test over random
+    offsets, incl. empty rows, full capacity, and all-padding blocks);
+  * fwd/grad parity of the work-list kernels vs the dense-grid kernels
+    and the XLA oracle in interpret mode (grads incl. both RAB tables);
+  * grid length == the static live-pairs bound, < nb² on short-row packs;
+  * the JaggedAttnPlan is built once per step and reused by all layers.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RABConfig
+from repro.kernels.jagged_attention import (build_attn_plan,
+                                            jagged_attention,
+                                            jagged_attention_ref,
+                                            make_attn_fn, num_pairs_bound)
+
+RAB = RABConfig(num_pos_buckets=64, num_time_buckets=16)
+
+
+def _mk_jagged(key, cap, lens, H, D, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    offsets = jnp.asarray(np.concatenate([[0], np.cumsum(lens)]), jnp.int32)
+    q = jax.random.normal(ks[0], (cap, H, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (cap, H, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (cap, H, D), jnp.float32).astype(dtype)
+    ts = jnp.cumsum(jax.random.randint(ks[3], (cap,), 0, 500)).astype(jnp.int32)
+    return q, k, v, offsets, ts
+
+
+# --------------------------------------------------------------------------
+# work-list builder — exact enumeration property
+# --------------------------------------------------------------------------
+
+def _ref_live_pairs(lengths, capp, block, causal):
+    """Block-reduce the dense token mask: the ground-truth live pairs."""
+    total = int(np.sum(lengths))
+    slot = np.arange(capp)
+    seg = np.full(capp, -1, np.int64)
+    cur = 0
+    for i, n in enumerate(lengths):
+        seg[cur:cur + n] = i
+        cur += n
+    m = (seg[:, None] == seg[None, :]) & (seg[:, None] >= 0)
+    assert total == cur
+    if causal:
+        m &= slot[:, None] >= slot[None, :]
+    nb = capp // block
+    return {(i, j) for i in range(nb) for j in range(nb)
+            if m[i * block:(i + 1) * block, j * block:(j + 1) * block].any()}
+
+
+def _check_worklist(wl, flags, n_live, ref, nb, dest_col):
+    wl = np.asarray(wl)
+    flags = np.asarray(flags)
+    got = [tuple(p) for p in wl[:n_live]]
+    assert len(got) == len(set(got)), "duplicate live pairs"
+    assert set(got) == ref
+    # destination-major, nondecreasing over the whole padded list
+    dest = wl[:, dest_col]
+    assert (np.diff(dest) >= 0).all()
+    # the tail replicates the last live pair
+    if n_live:
+        assert (wl[n_live:] == wl[n_live - 1]).all()
+    # first/last visit flags delimit each destination run (padded list)
+    P = wl.shape[0]
+    for p in range(P):
+        assert flags[p, 0] == int(p == 0 or dest[p] != dest[p - 1])
+        assert flags[p, 1] == int(p == P - 1 or dest[p] != dest[p + 1])
+
+
+CASES = [
+    # lengths, extra_pad, block, causal — incl. empty rows, full capacity,
+    # all-padding blocks, single row spanning everything
+    ([5, 0, 12, 3], 4, 8, True),
+    ([5, 0, 12, 3], 4, 8, False),
+    ([32], 0, 8, True),                    # one full-capacity row
+    ([0, 0, 0], 24, 8, True),              # all padding
+    ([1] * 11, 29, 8, True),               # singletons + trailing pad blocks
+    ([17, 9, 30, 2, 2], 20, 16, True),
+    ([17, 9, 30, 2, 2], 20, 16, False),
+    ([40, 40, 40], 8, 16, True),           # rows straddling blocks
+]
+
+
+@pytest.mark.parametrize("lengths,extra_pad,block,causal", CASES)
+def test_worklist_enumerates_exact_live_pairs(lengths, extra_pad, block,
+                                              causal):
+    cap = int(np.sum(lengths)) + extra_pad
+    capp = cap + (-cap) % block
+    nb = capp // block
+    offsets = jnp.asarray(np.concatenate([[0], np.cumsum(lengths)]),
+                          jnp.int32)
+    ts = jnp.zeros((cap,), jnp.int32)
+    hint = max(lengths) if lengths else None
+    plan = build_attn_plan(offsets, ts, cap, block=block, causal=causal,
+                           max_row_len=hint)
+    ref = _ref_live_pairs(lengths, capp, block, causal)
+    n_live = int(plan.n_live[0])
+    assert n_live == len(ref)
+    assert n_live <= plan.num_pairs
+    assert plan.num_pairs == num_pairs_bound(nb, block, len(lengths),
+                                             hint, causal)
+    _check_worklist(plan.q_wl, plan.q_flags, n_live, ref, nb, dest_col=0)
+    _check_worklist(plan.kv_wl, plan.kv_flags, n_live, ref, nb, dest_col=1)
+
+
+def test_worklist_property_random_offsets():
+    """Randomized sweep (hypothesis-style, seeded) over jagged shapes."""
+    rng = np.random.default_rng(0)
+    for trial in range(40):
+        block = int(rng.choice([8, 16]))
+        nrows = int(rng.integers(1, 7))
+        lengths = [int(x) for x in rng.integers(0, 41, nrows)]
+        extra = int(rng.integers(0, 2 * block + 1))
+        causal = bool(rng.integers(0, 2))
+        use_hint = bool(rng.integers(0, 2))
+        cap = int(np.sum(lengths)) + extra
+        if cap == 0:
+            cap = block
+        capp = cap + (-cap) % block
+        nb = capp // block
+        offsets = jnp.asarray(np.concatenate([[0], np.cumsum(lengths)]),
+                              jnp.int32)
+        hint = (max(lengths) if lengths else 0) if use_hint else None
+        plan = build_attn_plan(offsets, jnp.zeros((cap,), jnp.int32), cap,
+                               block=block, causal=causal, max_row_len=hint)
+        ref = _ref_live_pairs(lengths, capp, block, causal)
+        n_live = int(plan.n_live[0])
+        assert n_live == len(ref), (trial, lengths, block, causal)
+        assert n_live <= plan.num_pairs
+        _check_worklist(plan.q_wl, plan.q_flags, n_live, ref, nb, 0)
+        _check_worklist(plan.kv_wl, plan.kv_flags, n_live, ref, nb, 1)
+
+
+def test_grid_length_below_dense_on_short_rows():
+    """Many short rows → the static work-list bound beats nb² (and the
+    causal dense grid) by a wide margin; the plan is padded to that bound."""
+    block, nrows, rlen = 64, 16, 64
+    cap = nrows * rlen                      # 1024, nb = 16
+    lens = [rlen] * nrows
+    offsets = jnp.asarray(np.concatenate([[0], np.cumsum(lens)]), jnp.int32)
+    plan = build_attn_plan(offsets, jnp.zeros((cap,), jnp.int32), cap,
+                           block=block, max_row_len=rlen)
+    nb = cap // block
+    assert plan.num_pairs < nb * (nb + 1) // 2 < nb * nb
+    assert int(plan.n_live[0]) <= plan.num_pairs
+    # dense grid visits nb² = 256 steps; the work-list visits 48
+    assert nb * nb / plan.num_pairs >= 4.0
+
+
+# --------------------------------------------------------------------------
+# kernel parity — work-list vs dense grid vs XLA oracle
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cap,lens,H,D,block", [
+    (256, [100, 60, 0, 40], 4, 32, 64),
+    (256, [64] * 4, 2, 16, 64),            # block-aligned short rows
+    (300, [120, 77], 4, 32, 64),           # cap not multiple of block (pad)
+    (128, [1, 1, 1, 1], 1, 8, 64),         # singletons, dead tail block
+])
+def test_worklist_fwd_matches_dense_and_oracle(cap, lens, H, D, block):
+    q, k, v, offsets, ts = _mk_jagged(jax.random.PRNGKey(0), cap, lens, H, D)
+    rp = {"pos_table":
+          jax.random.normal(jax.random.PRNGKey(1), (64, H)) * 0.02,
+          "time_table":
+          jax.random.normal(jax.random.PRNGKey(2), (16, H)) * 0.02}
+    hint = max(lens)
+    out_wl = jagged_attention(q, k, v, offsets, ts, rp, RAB, block=block,
+                              schedule="worklist", max_row_len=hint,
+                              interpret=True)
+    out_dn = jagged_attention(q, k, v, offsets, ts, rp, RAB, block=block,
+                              schedule="dense", interpret=True)
+    ref = jagged_attention_ref(q, k, v, offsets, ts, rp, RAB)
+    np.testing.assert_allclose(np.asarray(out_wl), np.asarray(out_dn),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out_wl), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_worklist_grads_match_dense_and_oracle():
+    cap, H, D, block = 256, 4, 32, 64
+    lens = [100, 60, 40]
+    q, k, v, offsets, ts = _mk_jagged(jax.random.PRNGKey(4), cap, lens, H, D)
+    rp = {"pos_table":
+          jax.random.normal(jax.random.PRNGKey(5), (64, H)) * 0.02,
+          "time_table":
+          jax.random.normal(jax.random.PRNGKey(6), (16, H)) * 0.02}
+
+    def loss(fn):
+        def inner(q, k, v, pt, tt):
+            r = {"pos_table": pt, "time_table": tt}
+            return jnp.sum(jnp.sin(fn(q, k, v, offsets, ts, r, RAB)))
+        return inner
+
+    wl = lambda *a, **kw: jagged_attention(*a, block=block,
+                                           schedule="worklist",
+                                           max_row_len=max(lens),
+                                           interpret=True, **kw)
+    dn = lambda *a, **kw: jagged_attention(*a, block=block,
+                                           schedule="dense",
+                                           interpret=True, **kw)
+    args = (q, k, v, rp["pos_table"], rp["time_table"])
+    g_wl = jax.grad(loss(wl), argnums=(0, 1, 2, 3, 4))(*args)
+    g_dn = jax.grad(loss(dn), argnums=(0, 1, 2, 3, 4))(*args)
+    g_rf = jax.grad(loss(jagged_attention_ref), argnums=(0, 1, 2, 3, 4))(*args)
+    for name, a, b, c in zip("q k v pos_table time_table".split(),
+                             g_wl, g_dn, g_rf):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5, err_msg=name)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=1e-4, atol=1e-4, err_msg=name)
+
+
+def test_worklist_functional_time_grads():
+    """FuXi functional time mode through the work-list backward kernels."""
+    rabf = RABConfig(num_pos_buckets=64, num_time_buckets=32)
+    H, D, cap, block = 4, 32, 256, 64
+    offsets = jnp.asarray([0, 100, 160, 200], jnp.int32)
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    q = jax.random.normal(ks[0], (cap, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (cap, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (cap, H, D), jnp.float32)
+    ts = jnp.cumsum(jax.random.randint(ks[3], (cap,), 1, 500)).astype(jnp.int32)
+    rp = {"pos_table": jax.random.normal(ks[4], (64, H)) * 0.02,
+          "time_amp": jnp.full((H,), 0.05, jnp.float32),
+          "time_log_sigma": jnp.linspace(2.0, 8.0, H).astype(jnp.float32),
+          "time_rho": jnp.linspace(-0.5, 0.5, H).astype(jnp.float32)}
+
+    def loss(schedule):
+        def inner(amp, ls, rho):
+            r2 = {**rp, "time_amp": amp, "time_log_sigma": ls,
+                  "time_rho": rho}
+            return jnp.sum(jnp.sin(jagged_attention(
+                q, k, v, offsets, ts, r2, rabf, time_mode="functional",
+                block=block, schedule=schedule, max_row_len=100,
+                interpret=True)))
+        return inner
+
+    args = (rp["time_amp"], rp["time_log_sigma"], rp["time_rho"])
+    g_wl = jax.grad(loss("worklist"), argnums=(0, 1, 2))(*args)
+    g_dn = jax.grad(loss("dense"), argnums=(0, 1, 2))(*args)
+    for name, a, b in zip("amp log_sigma rho".split(), g_wl, g_dn):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-7, err_msg=name)
+
+
+def test_plan_reuse_matches_per_call_plan():
+    """An explicitly threaded plan gives bit-identical results."""
+    cap, H, D, block = 256, 2, 16, 64
+    lens = [90, 70, 30]
+    q, k, v, offsets, ts = _mk_jagged(jax.random.PRNGKey(8), cap, lens, H, D)
+    rp = {"pos_table": jax.random.normal(jax.random.PRNGKey(9), (64, H))}
+    plan = build_attn_plan(offsets, ts, cap, block=block,
+                           max_row_len=max(lens))
+    out_a = jagged_attention(q, k, v, offsets, ts, rp, RAB, block=block,
+                             plan=plan, interpret=True)
+    out_b = jagged_attention(q, k, v, offsets, ts, rp, RAB, block=block,
+                             max_row_len=max(lens), interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_a), np.asarray(out_b))
+
+
+def test_plan_block_mismatch_raises():
+    cap, block = 256, 64
+    offsets = jnp.asarray([0, 100], jnp.int32)
+    ts = jnp.zeros((cap,), jnp.int32)
+    plan = build_attn_plan(offsets, ts, cap, block=block)
+    q = jnp.zeros((cap, 2, 16), jnp.float32)
+    with pytest.raises(ValueError):
+        jagged_attention(q, q, q, offsets, ts, {}, None, block=128,
+                         plan=plan, interpret=True)
+
+
+# --------------------------------------------------------------------------
+# one-per-step planning through the model stack
+# --------------------------------------------------------------------------
+
+def test_plan_built_once_per_step(monkeypatch):
+    """GRBundle.loss with a plan-aware attn_fn builds the JaggedAttnPlan
+    exactly once per step (per shard trace), not once per layer."""
+    import repro.kernels.jagged_attention.ops as ops_mod
+    from repro.configs import ARCHS, reduced
+    from repro.models.model_zoo import get_bundle
+
+    cfg = reduced(ARCHS["hstu-tiny"]).replace(num_negatives=4)
+    assert cfg.num_layers >= 2, "needs a multi-layer stack"
+    b = get_bundle(cfg)
+    key = jax.random.PRNGKey(0)
+    dense = b.init_dense(key)
+    table = b.init_table(key)
+    G, cap = 1, 128
+    batch = {
+        "ids": jax.random.randint(key, (G, cap), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (G, cap), 0, cfg.vocab_size),
+        "timestamps": jnp.cumsum(
+            jax.random.randint(key, (G, cap), 0, 900), 1).astype(jnp.int32),
+        "offsets": jnp.asarray([[0, 60, 100]], jnp.int32),
+        "neg_ids": jax.random.randint(key, (G, cap, 4), 0, cfg.vocab_size),
+        "rng": jnp.zeros((2,), jnp.uint32),
+    }
+
+    calls = []
+    orig = ops_mod.build_attn_plan
+
+    def counted(*a, **kw):
+        calls.append(1)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(ops_mod, "build_attn_plan", counted)
+    loss = b.loss(dense, table, batch,
+                  attn_fn=make_attn_fn(block=64, interpret=True))
+    assert np.isfinite(float(loss))
+    assert len(calls) == 1, (f"plan built {len(calls)}× for "
+                             f"{cfg.num_layers} layers — expected once")
+
+
+def test_planned_attention_grads_under_vmap():
+    """Regression: the custom VJP must not close over vmap-batched plan
+    arrays (tracer leak) — grads through gr_hidden_sharded with G > 1
+    shards is exactly the trainer's TPU path."""
+    from repro.configs import ARCHS, reduced
+    from repro.models.model_zoo import get_bundle
+
+    cfg = reduced(ARCHS["hstu-tiny"]).replace(num_negatives=4)
+    b = get_bundle(cfg)
+    key = jax.random.PRNGKey(3)
+    dense = b.init_dense(key)
+    table = b.init_table(key)
+    G, cap = 2, 128
+    batch = {
+        "ids": jax.random.randint(key, (G, cap), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (G, cap), 0, cfg.vocab_size),
+        "timestamps": jnp.cumsum(
+            jax.random.randint(key, (G, cap), 0, 900), 1).astype(jnp.int32),
+        "offsets": jnp.asarray([[0, 64, 128], [0, 100, 120]], jnp.int32),
+        "neg_ids": jax.random.randint(key, (G, cap, 4), 0, cfg.vocab_size),
+        "rng": jnp.zeros((2,), jnp.uint32),
+    }
+    attn = make_attn_fn(block=64, interpret=True, max_row_len=cfg.max_seq_len)
+    f_wl = lambda d, t: b.loss(d, t, batch, attn_fn=attn)
+    f_bl = lambda d, t: b.loss(d, t, batch)
+    g_wl = jax.grad(f_wl, argnums=(0, 1))(dense, table)
+    g_bl = jax.grad(f_bl, argnums=(0, 1))(dense, table)
+    for a, c in zip(jax.tree.leaves(g_wl), jax.tree.leaves(g_bl)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(c, np.float32),
+                                   rtol=5e-2, atol=5e-3)
+
+
+def test_planned_attention_in_model_matches_baseline():
+    """The work-list kernel as the model's attn_fn reproduces the XLA
+    blocked-path loss (the TPU-default wiring, exercised in interpret)."""
+    from repro.configs import ARCHS, reduced
+    from repro.models.model_zoo import get_bundle
+
+    cfg = reduced(ARCHS["hstu-tiny"]).replace(num_negatives=4)
+    b = get_bundle(cfg)
+    key = jax.random.PRNGKey(2)
+    dense = b.init_dense(key)
+    table = b.init_table(key)
+    G, cap = 1, 128
+    batch = {
+        "ids": jax.random.randint(key, (G, cap), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (G, cap), 0, cfg.vocab_size),
+        "timestamps": jnp.cumsum(
+            jax.random.randint(key, (G, cap), 0, 900), 1).astype(jnp.int32),
+        "offsets": jnp.asarray([[0, 60, 100]], jnp.int32),
+        "neg_ids": jax.random.randint(key, (G, cap, 4), 0, cfg.vocab_size),
+        "rng": jnp.zeros((2,), jnp.uint32),
+    }
+    l_xla = b.loss(dense, table, batch, neg_mode="baseline")
+    l_wl = b.loss(dense, table, batch, neg_mode="baseline",
+                  attn_fn=make_attn_fn(block=64, interpret=True,
+                                       max_row_len=cfg.max_seq_len))
+    np.testing.assert_allclose(float(l_xla), float(l_wl), rtol=2e-3)

@@ -6,8 +6,8 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.jagged import (JaggedBatch, from_dense, from_row_list,
-                               segment_matrix_mask, to_dense)
+from repro.core.jagged import (NEG_SEG, JaggedBatch, from_dense,
+                               from_row_list, segment_matrix_mask, to_dense)
 
 lengths_strategy = st.lists(st.integers(0, 17), min_size=1, max_size=8)
 
@@ -42,8 +42,27 @@ def test_segment_ids_and_positions(lengths):
             assert seg[cur] == i
             assert pos[cur] == k
             cur += 1
-    assert (seg[cur:] == len(lengths)).all()     # padding sentinel
+    assert (seg[cur:] == NEG_SEG).all()          # padding sentinel
     assert (pos[cur:] == 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(lengths=lengths_strategy)
+def test_padding_sentinel_matches_kernel_layout(lengths):
+    """Regression: JaggedBatch.segment_ids() and the attention kernels'
+    token metadata must agree on the padding sentinel (NEG_SEG) — the two
+    layouts used to drift (-1 vs num_rows)."""
+    from repro.kernels.jagged_attention import kernel as K
+    from repro.kernels.jagged_attention.ops import _token_meta
+
+    lens = np.asarray(lengths, np.int32)
+    offsets = jnp.asarray(np.concatenate([[0], np.cumsum(lens)]), jnp.int32)
+    cap = int(offsets[-1]) + 7
+    j = JaggedBatch(values=jnp.zeros((cap, 1)), offsets=offsets)
+    meta_i32, _ = _token_meta(cap, offsets, jnp.zeros((cap,), jnp.int32))
+    assert K.NEG_SEG == NEG_SEG
+    np.testing.assert_array_equal(np.asarray(j.segment_ids()),
+                                  np.asarray(meta_i32[:, 0]))
 
 
 @settings(max_examples=20, deadline=None)
