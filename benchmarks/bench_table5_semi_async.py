@@ -61,8 +61,9 @@ def main():
     for mode in (False, True):
         state = gr_train_state(b.init_dense(key), b.init_table(key))
         step = jax.jit(make_gr_train_step(
-            lambda d, t, bt: b.loss(d, t, bt, neg_mode="fused",
-                                    neg_segment=32), semi_async=mode))
+            lambda d, t, bt, **kw: b.loss(d, t, bt, neg_mode="fused",
+                                          neg_segment=32, **kw),
+            semi_async=mode))
         for i in range(12):
             state, m = step(state, batch(i % 3))
         losses[mode] = float(m["loss"])

@@ -28,20 +28,26 @@ from benchmarks.bench_fig12_quant import hr_at_k
 
 
 def train_once(cfg, seqs, n_items, R, expansion, steps=30, seed=1):
+    from repro.training.trainer import gr_pending_slots
     b = get_bundle(cfg.replace(num_negatives=R))
     key = jax.random.PRNGKey(0)
-    state = gr_train_state(b.init_dense(key), b.init_table(key))
     loader = GRLoader(seqs, num_devices=2, users_per_device=4,
                       max_seq_len=64, num_negatives=R, num_items=n_items,
                       seed=seed)
-    loss_fn = lambda d, t, bt: b.loss(d, t, bt, neg_mode="fused",
-                                      neg_segment=64, expansion=expansion)
+    loss_fn = lambda d, t, bt, **kw: b.loss(d, t, bt, neg_mode="fused",
+                                            neg_segment=64,
+                                            expansion=expansion, **kw)
     step_j = jax.jit(make_gr_train_step(loss_fn))
+    state = None
     step = None                         # AOT-compiled on the first batch:
     peak = -1                           # one compile serves stats + steps
     for batch in loader.batches(steps):
         nb = {k: jnp.asarray(v) for k, v in batch.items() if k != "weights"}
         if step is None:
+            # AOT steps need the τ=1 pair buffers presized (the executable
+            # signature is shape-strict, unlike a re-traceable jit)
+            state = gr_train_state(b.init_dense(key), b.init_table(key),
+                                   pending_slots=gr_pending_slots(nb))
             step = step_j.lower(state, nb).compile()
             ma = step.memory_analysis()
             if ma is not None:           # fused-path peak incl. backward
@@ -62,7 +68,7 @@ def main():
                       ("half_R16_unshared", 16, 1),
                       ("half_R16_shared_k2", 16, 2)):
         state, loss, peak = train_once(cfg, seqs, n_items, R, k)
-        hr = hr_at_k(state.dense, state.table,
+        hr = hr_at_k(state.dense, state.table.master,
                      cfg.replace(num_negatives=R), seqs, test, k=100)
         rows[tag] = (loss, hr)
         emit(f"table8_logit_sharing.{tag}", 0.0,

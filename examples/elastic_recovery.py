@@ -35,8 +35,8 @@ def main():
     def build_step(mesh):
         from repro.training.trainer import GRTrainState
         raw = make_gr_train_step(
-            lambda d, t, b: bundle.loss(d, t, b, neg_mode="fused",
-                                        neg_segment=32))
+            lambda d, t, b, **kw: bundle.loss(d, t, b, neg_mode="fused",
+                                              neg_segment=32, **kw))
 
         @jax.jit
         def step(state_dict, batch):

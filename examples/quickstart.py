@@ -48,8 +48,9 @@ def main():
     # 4. train step: §4.3 fused negative path (megakernel on TPU, remat'd
     #    scan elsewhere) + fp16 fetch + logit sharing, §4.2.2 semi-async
     step = jax.jit(make_gr_train_step(
-        lambda d, t, b: bundle.loss(d, t, b, neg_mode="fused",
-                                    neg_segment=64, expansion=2),
+        lambda d, t, b, **kw: bundle.loss(d, t, b, neg_mode="fused",
+                                          neg_segment=64, expansion=2,
+                                          **kw),
         semi_async=True))
 
     for i, batch in enumerate(loader.batches(20)):

@@ -55,21 +55,24 @@ def main():
 
     for fetch_name, fetch_dtype in (("fp32", jnp.float32),
                                     ("fp16 (paper §4.3.2)", jnp.float16)):
+        # fp16 arm: persistent shadow table (half-width negative fetches);
+        # fp32 arm: no shadow, full-precision master gathers
+        qdtype = None if fetch_dtype == jnp.float32 else fetch_dtype
         state = gr_train_state(bundle.init_dense(key),
-                               bundle.init_table(key))
+                               bundle.init_table(key), qdtype=qdtype)
         loader = GRLoader(seqs, num_devices=2, users_per_device=4,
                           max_seq_len=128, num_negatives=16,
                           num_items=n_items, seed=1)
         step = jax.jit(make_gr_train_step(
-            lambda d, t, b: bundle.loss(d, t, b, neg_mode="fused",
-                                        neg_segment=64,
-                                        fetch_dtype=fetch_dtype,
-                                        expansion=2)))
+            lambda d, t, b, **kw: bundle.loss(d, t, b, neg_mode="fused",
+                                              neg_segment=64,
+                                              fetch_dtype=fetch_dtype,
+                                              expansion=2, **kw)))
         for i, batch in enumerate(loader.batches(40)):
             nb = {k2: jnp.asarray(v) for k2, v in batch.items()
                   if k2 != "weights"}
             state, m = step(state, nb)
-        hr = evaluate_hr(state.dense, state.table, cfg, seqs, test)
+        hr = evaluate_hr(state.dense, state.table.master, cfg, seqs, test)
         print(f"{fetch_name:22s} final loss {float(m['loss']):.4f}  "
               f"HR@100 {hr:.4f}")
     print("fp16 negative fetch tracks fp32 quality (paper Fig. 12)")

@@ -37,8 +37,8 @@ def main():
     state = gr_train_state(bundle.init_dense(key), bundle.init_table(key))
     loader = GRLoader(seqs, 2, 4, 128, 16, n_items)
     step = jax.jit(make_gr_train_step(
-        lambda d, t, b: bundle.loss(d, t, b, neg_mode="fused",
-                                    neg_segment=64)))
+        lambda d, t, b, **kw: bundle.loss(d, t, b, neg_mode="fused",
+                                          neg_segment=64, **kw)))
     for batch in loader.batches(15):
         nb = {k: jnp.asarray(v) for k, v in batch.items() if k != "weights"}
         state, m = step(state, nb)
@@ -71,12 +71,12 @@ def main():
             offsets[g, j + 1] = cur
             last_pos[g, j] = cur - 1
     t0 = time.time()
-    h = serve(state.dense, state.table, jnp.asarray(ids),
+    h = serve(state.dense, state.table.master, jnp.asarray(ids),
               jnp.asarray(offsets), jnp.asarray(ts))
     h.block_until_ready()
     lat = time.time() - t0
     hits = 0
-    tablef = np.asarray(state.table, np.float32)
+    tablef = np.asarray(state.table.master, np.float32)
     hf = np.asarray(h, np.float32)
     for g in range(G):
         for j, u in enumerate(users[g * per:(g + 1) * per]):

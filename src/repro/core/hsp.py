@@ -29,7 +29,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-shard_map = jax.shard_map
+try:
+    shard_map = jax.shard_map                  # jax ≥ 0.5 top-level API
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    def shard_map(f, **kw):
+        # the experimental API spells check_vma as check_rep
+        kw["check_rep"] = kw.pop("check_vma", True)
+        return _legacy_shard_map(f, **kw)
 
 
 # --------------------------------------------------------------------------
@@ -106,7 +114,9 @@ def make_hsp_lookup(mesh: Mesh, *, group_axes: Tuple[str, ...] = ("model",),
         """Row offset of this device's vocab shard within the group."""
         idx = jnp.int32(0)
         for a in group_axes:
-            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            # axis sizes are static mesh facts (jax.lax.axis_size is not
+            # available on older jax)
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
         return idx * V_shard
 
     def _fwd_impl(table, ids):

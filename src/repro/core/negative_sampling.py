@@ -30,6 +30,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.neg_logits import fused_recall_lse
 from repro.kernels.neg_logits.fused import NEG_POOL
@@ -192,18 +193,54 @@ def recall_loss(out_emb: jax.Array, pos_emb: jax.Array,
 # fused ID-driven recall path (tentpole): one pass from ids to Eq.-2 lse
 # --------------------------------------------------------------------------
 
+def shadow_gather(table: jax.Array, shadow: jax.Array,
+                  ids: jax.Array) -> jax.Array:
+    """Straight-through shadow fetch for the XLA fused twin.
+
+    Forward reads ONLY the half-precision ``shadow`` rows (half the fetch
+    bytes, visible in ``cost_analysis``); backward routes the cotangent to
+    ``table`` (the fp32 master) as the plain gather-grad scatter — the
+    same straight-through estimator the Pallas custom VJP implements
+    (logits are linear in the rows, so d logit/d row = out/τ regardless of
+    the rounding). ``ids`` travels through the VJP as an argument (float0
+    cotangent): capturing it by closure would leak scan-body tracers into
+    the backward pass.
+    """
+    V, D = table.shape
+    tdtype = table.dtype
+
+    @jax.custom_vjp
+    def _fetch(tbl, ids_):
+        return jnp.take(shadow, ids_, axis=0)
+
+    def fwd(tbl, ids_):
+        return _fetch(tbl, ids_), ids_
+
+    def bwd(ids_, g):
+        dtbl = jnp.zeros((V, D), tdtype).at[ids_].add(
+            g.astype(tdtype), mode="drop")
+        return dtbl, np.zeros(ids_.shape, jax.dtypes.float0)
+
+    _fetch.defvjp(fwd, bwd)
+    return _fetch(table, ids)
+
+
 def fused_recall_lse_xla(out_emb: jax.Array, pos_logit: jax.Array,
                          table: jax.Array, neg_ids: jax.Array, *,
                          segment: int = 128, tau: float = 1.0,
                          expansion: int = 1,
                          key: Optional[jax.Array] = None,
                          valid: Optional[jax.Array] = None,
-                         fetch_dtype=None) -> jax.Array:
+                         fetch_dtype=None,
+                         gather_table: Optional[jax.Array] = None
+                         ) -> jax.Array:
     """XLA twin of the fused megakernel (identical numerics, same
     per-segment shuffle): a remat'd segmented scan, so neither the forward
     nor the backward ever holds (T, R, D) gathered rows or (T, R·k)
     expanded logits — the backward re-gathers per segment exactly like the
-    Pallas custom VJP."""
+    Pallas custom VJP. ``gather_table`` fetches rows from the persistent
+    half-precision shadow (straight-through grad to ``table``), matching
+    the Pallas path's shadow gather."""
     T, R = neg_ids.shape
     D = table.shape[1]
     inv_tau = 1.0 / tau
@@ -218,9 +255,12 @@ def fused_recall_lse_xla(out_emb: jax.Array, pos_logit: jax.Array,
         idsb = jax.lax.dynamic_slice_in_dim(ids_p, si * segment, segment, 0)
         posb = jax.lax.dynamic_slice_in_dim(pos_p, si * segment, segment, 0)
         vb = jax.lax.dynamic_slice_in_dim(valid_p, si * segment, segment, 0)
-        rows = jnp.take(table, idsb.reshape(-1), axis=0)
-        if fetch_dtype is not None:
-            rows = rows.astype(fetch_dtype)
+        if gather_table is not None:
+            rows = shadow_gather(table, gather_table, idsb.reshape(-1))
+        else:
+            rows = jnp.take(table, idsb.reshape(-1), axis=0)
+            if fetch_dtype is not None:
+                rows = rows.astype(fetch_dtype)
         logits = jnp.einsum("td,trd->tr", o.astype(jnp.float32),
                             rows.reshape(segment, R, D).astype(jnp.float32)
                             ) * inv_tau
@@ -247,6 +287,7 @@ def fused_sampled_softmax_loss(out_emb: jax.Array, pos_emb: jax.Array,
                                valid: Optional[jax.Array] = None,
                                segment: int = 128, expansion: int = 1,
                                fetch_dtype=jnp.float16,
+                               shadow: Optional[jax.Array] = None,
                                impl: Optional[str] = None,
                                interpret: Optional[bool] = None
                                ) -> jax.Array:
@@ -256,13 +297,19 @@ def fused_sampled_softmax_loss(out_emb: jax.Array, pos_emb: jax.Array,
     segmented scan; default elsewhere), or None for backend dispatch. Both
     implementations share numerics and the deterministic per-segment
     sharing shuffle, so they are interchangeable mid-training.
+
+    ``shadow``: persistent half-precision table (§4.3.2 end to end) — the
+    negative rows are fetched from it at half the bytes; gradients flow to
+    ``table``. When None, ``fetch_dtype`` rounds fp32 master rows at the
+    fetch instead (same numerics under the shadow invariant, full
+    bandwidth).
     """
     if impl is None:
         impl = "pallas" if jax.default_backend() == "tpu" else "xla"
     pos = jnp.sum(out_emb.astype(jnp.float32) * pos_emb.astype(jnp.float32),
                   axis=-1) / tau
     kw = dict(segment=segment, tau=tau, expansion=expansion, key=key,
-              valid=valid, fetch_dtype=fetch_dtype)
+              valid=valid, fetch_dtype=fetch_dtype, gather_table=shadow)
     if impl == "pallas":
         lse = fused_recall_lse(out_emb, pos, table, neg_ids,
                                interpret=interpret, **kw)

@@ -7,6 +7,19 @@ the dependency of batch (i+1)'s sparse forward on batch i's sparse backward
 in JAX the two dispatch regions are free to overlap because nothing in the
 dataflow graph orders them.
 
+Staleness window (the part the trainer must get right): the delayed update
+of batch t's gradient lands *during* batch t+1's dense stream. The only
+read issued before it lands is the prefetched input-side lookup (the
+feature all-to-all dispatched at the step boundary) — that read is one
+step stale. The loss-stage table reads (labels, negatives) execute at the
+tail of batch t+1's dense forward, after the update has landed, and see
+fresh rows. Treating *every* read of step t+1 as stale — the original
+implementation here — widens the effective window to two steps for the
+loss path and over-penalizes the trajectory (it tripped the Table-5
+closeness bound at short horizons). ``make_gr_train_step`` implements the
+corrected accounting; the helpers below remain the generic whole-table
+τ-delay reference the convergence tests compare against.
+
 Convergence (Appendix C):  E‖∇f‖² ≤ O(√Lσ/√T + L/T + αLτ/T) — the delay
 penalty is scaled by the feature-collision probability α, so for sparse
 recommendation features (α≪1) the trajectory is indistinguishable from

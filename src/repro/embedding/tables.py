@@ -14,7 +14,7 @@ gather. The TPU hot-path kernel is ``repro.kernels.jagged_lookup``.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +51,68 @@ def lookup_quantized(table: jax.Array, ids: jax.Array,
     bytes. The fused TPU hot path (``repro.kernels.neg_logits``) applies
     the same rounding in VMEM and never materializes the rows at all."""
     return jnp.take(table, ids, axis=0).astype(qdtype)
+
+
+# --------------------------------------------------------------------------
+# §4.3.2 persistent half-precision shadow table
+# --------------------------------------------------------------------------
+
+class ShadowedTable(NamedTuple):
+    """fp32 master + persistent half-precision shadow + AdaGrad accumulator.
+
+    The shadow realizes the §4.3.2 bandwidth win end to end: the fused
+    negative-sampling kernel gathers half-width rows from ``shadow``
+    (HBM→VMEM DMA at half the bytes, dequant in VMEM) instead of fetching
+    fp32 master rows and rounding them in VMEM. The invariant
+
+        shadow == master.astype(shadow.dtype)   (rows V, dims D)
+
+    is maintained by :func:`repro.training.optim.adagrad_sparse_update`,
+    which rewrites only the rows a step actually touched. ``shadow=None``
+    disables the shadow (the fused path falls back to the fp32-round
+    emulation); checkpoints store a 0-row shadow placeholder (dtype kept,
+    bytes dropped) and restore rebuilds it from the master — see
+    :func:`strip_shadow` / :func:`rebuild_shadow`.
+    """
+    master: jax.Array               # (V, D) fp32
+    shadow: Optional[jax.Array]     # (V, D) fp16/bf16, or None
+    accum: jax.Array                # (V, D) fp32 AdaGrad S (paper Eq. 1)
+
+
+def make_shadowed(master: jax.Array, qdtype=jnp.float16,
+                  accum: Optional[jax.Array] = None) -> ShadowedTable:
+    """Build a ShadowedTable from an fp32 master. ``qdtype=None`` → no
+    shadow (fp32-round emulation path)."""
+    shadow = None if qdtype is None else master.astype(qdtype)
+    if accum is None:
+        accum = jnp.zeros_like(master, jnp.float32)
+    return ShadowedTable(master=master, shadow=shadow, accum=accum)
+
+
+def strip_shadow(t: ShadowedTable) -> ShadowedTable:
+    """Replace the shadow with a 0-row placeholder of the same dtype, so a
+    checkpoint stores the master once (the shadow is derivable). The pytree
+    structure (leaf count) is unchanged."""
+    if t.shadow is None:
+        return t
+    return t._replace(shadow=jnp.zeros((0, t.shadow.shape[-1])
+                                       if t.shadow.ndim == 2 else (0,),
+                                       t.shadow.dtype))
+
+
+def rebuild_shadow(t: ShadowedTable) -> ShadowedTable:
+    """Recompute ``shadow = master.astype(qdtype)`` (restore path, or after
+    any out-of-band master edit)."""
+    if t.shadow is None:
+        return t
+    return t._replace(shadow=t.master.astype(t.shadow.dtype))
+
+
+def shadow_consistent(t: ShadowedTable) -> jax.Array:
+    """True iff the shadow invariant holds exactly (debug/test helper)."""
+    if t.shadow is None:
+        return jnp.bool_(True)
+    return jnp.all(t.master.astype(t.shadow.dtype) == t.shadow)
 
 
 def multi_table_lookup(tables: Dict[str, jax.Array],

@@ -104,6 +104,14 @@ def _compact_worklist(live: jax.Array, n_pairs: int, *,
     flat = (live.T if kv_major else live).reshape(-1)
     order = jnp.argsort(jnp.logical_not(flat), stable=True).astype(jnp.int32)
     n_live = jnp.sum(flat.astype(jnp.int32))
+    # Runtime clamp: if a row exceeds the max_row_len the static bound was
+    # built with, the true live count can exceed the list capacity. Without
+    # the clamp the tail-replication pair would be read from past the
+    # truncated list, breaking the nondecreasing-destination invariant the
+    # kernels' visit-flag protocol relies on (silent corruption). Clamped,
+    # the overflow degrades to dropped trailing pairs with a well-formed
+    # list; build_attn_plan's debug check turns it into a hard error.
+    n_live = jnp.minimum(n_live, n_pairs)
     idx = order[:n_pairs]
     last = order[jnp.maximum(n_live - 1, 0)]
     pos = jnp.arange(n_pairs, dtype=jnp.int32)
@@ -178,21 +186,48 @@ class JaggedAttnPlan(NamedTuple):
         return self.q_wl.shape[0]
 
 
+def _check_row_bound(offsets, max_row_len: int) -> None:
+    """Debug-mode hard error for rows longer than the plan's static bound.
+
+    Eager (concrete offsets) raises directly; under tracing the check runs
+    as a host callback at execution time.
+    """
+    def _raise(lengths):
+        worst = int(np.max(lengths)) if lengths.size else 0
+        if worst > max_row_len:
+            raise ValueError(
+                f"build_attn_plan: row of length {worst} exceeds "
+                f"max_row_len={max_row_len}; the work-list bound would "
+                f"overflow (pairs silently clamped outside debug mode)")
+
+    lengths = offsets[1:] - offsets[:-1]
+    if isinstance(lengths, jax.core.Tracer):
+        jax.debug.callback(_raise, lengths)
+    else:
+        _raise(np.asarray(lengths))
+
+
 def build_attn_plan(offsets: jax.Array, timestamps: jax.Array,
                     capacity: int, *, block: int = 128,
                     causal: bool = True,
                     max_row_len: Optional[int] = None,
-                    worklists: bool = True) -> JaggedAttnPlan:
+                    worklists: bool = True,
+                    debug_checks: bool = False) -> JaggedAttnPlan:
     """Build the per-step plan from the jagged structure (traced code).
 
     ``capacity`` may be any size ≥ offsets[-1]; it is padded up to a block
     multiple internally (matching :func:`jagged_attention`'s padding).
     ``max_row_len`` (static) tightens the work-list bound from the dense
     O(nb²) grid to O(num_rows · blocks_per_row²) — pass the loader's
-    max sequence length; rows must not exceed it. ``worklists=False``
-    skips the two argsort compactions and emits (1,)-dummy lists — for
-    the dense schedule only, which never reads them.
+    max sequence length. Rows longer than the bound overflow the static
+    list: the live count is clamped so the list stays well-formed
+    (trailing pairs dropped); ``debug_checks=True`` raises instead.
+    ``worklists=False`` skips the two argsort compactions and emits
+    (1,)-dummy lists — for the dense schedule only, which never reads
+    them.
     """
+    if debug_checks and max_row_len is not None:
+        _check_row_bound(offsets, max_row_len)
     pad = (-capacity) % block
     capp = capacity + pad
     if pad:
@@ -394,18 +429,21 @@ class PlannedAttention:
 
     def __init__(self, *, block: int = 128, schedule: str = "worklist",
                  causal: bool = True, max_row_len: Optional[int] = None,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 debug_checks: bool = False):
         self.block = block
         self.schedule = schedule
         self.causal = causal
         self.max_row_len = max_row_len
         self.interpret = interpret
+        self.debug_checks = debug_checks
 
     def make_plan(self, offsets: jax.Array, timestamps: jax.Array,
                   capacity: int) -> JaggedAttnPlan:
         return build_attn_plan(offsets, timestamps, capacity,
                                block=self.block, causal=self.causal,
-                               max_row_len=self.max_row_len)
+                               max_row_len=self.max_row_len,
+                               debug_checks=self.debug_checks)
 
     def __call__(self, q, k, v, offsets, timestamps, rab_params, rab, *,
                  time_mode: str = "bucket",

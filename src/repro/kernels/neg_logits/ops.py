@@ -121,6 +121,7 @@ def fused_recall_lse(out_emb: jax.Array, pos_logit: jax.Array,
                      segment: int = 128, tau: float = 1.0,
                      expansion: int = 1, key: Optional[jax.Array] = None,
                      valid: Optional[jax.Array] = None, fetch_dtype=None,
+                     gather_table: Optional[jax.Array] = None,
                      interpret: Optional[bool] = None) -> jax.Array:
     """Per-token logsumexp over [pos | R negatives | (k−1)·R shared] (Eq. 2).
 
@@ -131,11 +132,29 @@ def fused_recall_lse(out_emb: jax.Array, pos_logit: jax.Array,
     VMEM-resident logits. Differentiable in (out_emb, pos_logit, table);
     the table gradient is reduced from sparse (id, w·out_row) pairs through
     the sorted run-sum kernel.
+
+    ``gather_table`` (V, D), when given, is the §4.3.2 persistent
+    half-precision shadow: the kernel's BlockSpec gather DMAs its
+    half-width rows (real half-bandwidth HBM→VMEM traffic) and dequantizes
+    in VMEM, while the gradient still flows to ``table`` (the fp32 master)
+    — under the ``shadow == master.astype(qdtype)`` invariant the numerics
+    equal the fp32-round emulation exactly. Without it, ``fetch_dtype``
+    emulates the rounding on fp32 master rows (numerics-faithful, not
+    bandwidth-faithful).
     """
     interpret_ = default_interpret() if interpret is None else interpret
     T, R = neg_ids.shape
     V, D = table.shape
     inv_tau = 1.0 / tau
+    # shadow rows are already half-width: no in-VMEM rounding on top
+    fdt = fetch_dtype if gather_table is None else None
+
+    def _gather_src(tbl):
+        # the shadow rides in by closure (non-differentiable state, like
+        # ids_flat/valid2/perms); WITHOUT a shadow the gather must use the
+        # custom_vjp *argument* — closing over `table` there would leak
+        # the caller's JVPTracer into the primal.
+        return tbl if gather_table is None else gather_table
 
     o_p, pos_p, ids_p, valid_p, perms, n_seg = prepare_fused_inputs(
         out_emb, pos_logit, table, neg_ids, segment=segment,
@@ -147,9 +166,9 @@ def fused_recall_lse(out_emb: jax.Array, pos_logit: jax.Array,
 
     @jax.custom_vjp
     def _lse(o, pos2d, tbl):
-        return F.fwd_pallas(o, pos2d, tbl, ids_flat, valid2, perms,
-                            segment=segment, R=R, expansion=expansion,
-                            tau=tau, fetch_dtype=fetch_dtype,
+        return F.fwd_pallas(o, pos2d, _gather_src(tbl), ids_flat, valid2,
+                            perms, segment=segment, R=R,
+                            expansion=expansion, tau=tau, fetch_dtype=fdt,
                             interpret=interpret_)
 
     def fwd(o, pos2d, tbl):
@@ -159,9 +178,9 @@ def fused_recall_lse(out_emb: jax.Array, pos_logit: jax.Array,
     def bwd(res, g):
         o, pos2d, tbl, lse = res
         w, dout, dpos = F.bwd_pallas(
-            o, pos2d, tbl, ids_flat, valid2, perms, lse,
+            o, pos2d, _gather_src(tbl), ids_flat, valid2, perms, lse,
             g.astype(jnp.float32), segment=segment, R=R,
-            expansion=expansion, tau=tau, fetch_dtype=fetch_dtype,
+            expansion=expansion, tau=tau, fetch_dtype=fdt,
             interpret=interpret_)
         # sparse (id, grad_row) pairs → sorted run-sum reduction; rows are
         # per-(token, slot) so duplicates across the batch sum correctly.

@@ -36,8 +36,9 @@ from repro.launch import partition as PT
 from repro.launch import roofline as RL
 from repro.launch.mesh import make_production_mesh
 from repro.models.model_zoo import get_bundle
-from repro.training.trainer import (gr_train_state, lm_train_state,
-                                    make_gr_train_step, make_lm_train_step)
+from repro.training.trainer import (gr_pending_slots, gr_train_state,
+                                    lm_train_state, make_gr_train_step,
+                                    make_lm_train_step)
 
 
 def _sharded_bytes(sds_tree: Any, spec_tree: Any, mesh) -> int:
@@ -74,18 +75,23 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool):
             cfg = cfg.replace(
                 num_negatives=cfg.num_negatives // plan.neg_expansion)
             bundle = get_bundle(cfg)
-        state_sds = jax.eval_shape(
-            lambda: gr_train_state(bundle.init_dense(key),
-                                   bundle.init_table(key)))
-        dspecs = PT.gr_param_specs(state_sds.dense, mesh, plan)
-        tspec = PT.gr_table_spec(mesh, plan)
-        sspecs = PT.gr_state_specs(dspecs, tspec)
         # layout: "pack" = one big jagged buffer per device; "rows" =
         # row-major padded (one user per shard row) — the XLA-path attention
         # then only computes within-row pairs (§Perf H1)
         num_shards = (mesh.size if plan.gr_layout == "pack"
                       else shape.global_batch)
         inputs = bundle.input_specs(shape, num_shards=num_shards)
+        # presize the τ=1 pending pair buffers from the batch spec: with
+        # the default 0 slots the sparse-update stage would be statically
+        # compiled out and the cost/memory analysis would miss it
+        n_pend = gr_pending_slots(inputs["batch"])
+        state_sds = jax.eval_shape(
+            lambda: gr_train_state(bundle.init_dense(key),
+                                   bundle.init_table(key),
+                                   pending_slots=n_pend))
+        dspecs = PT.gr_param_specs(state_sds.dense, mesh, plan)
+        tspec = PT.gr_table_spec(mesh, plan)
+        sspecs = PT.gr_state_specs(dspecs, tspec)
         bspecs = PT.batch_specs(cfg, shape, mesh, plan, inputs)["batch"]
         dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
         lookup = make_hsp_lookup(
@@ -99,10 +105,10 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool):
         attn_fn = _partial(jagged_pointwise_attention_blocked,
                            block=plan.q_block,
                            score_dtype=jnp.dtype(plan.gr_score_dtype))
-        loss_fn = lambda d, t, b: bundle.loss(
+        loss_fn = lambda d, t, b, **kw: bundle.loss(
             d, t, b, lookup_fn=lookup, neg_mode="segmented",
             neg_segment=plan.neg_segment, expansion=plan.neg_expansion,
-            attn_fn=attn_fn, remat=plan.remat)
+            attn_fn=attn_fn, remat=plan.remat, **kw)
         step = make_gr_train_step(loss_fn, semi_async=True)
         jitted = jax.jit(step, in_shardings=(
             PT.to_named(mesh, sspecs), PT.to_named(mesh, bspecs)))
@@ -174,7 +180,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     # analytic per-device state bytes (CPU memory_analysis counts the
     # whole host platform; the sharded estimate is the per-chip check)
     state_bytes = _sharded_bytes(args[0], arg_specs[0], mesh)
-    cost = dict(compiled.cost_analysis() or {})
+    cost = RL.cost_dict(compiled)
     hlo = compiled.as_text()
     if hlo_dir:
         os.makedirs(hlo_dir, exist_ok=True)

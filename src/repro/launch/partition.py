@@ -337,13 +337,27 @@ def state_specs(param_specs: Any, mesh: Mesh) -> Any:
         step=P())
 
 
-def gr_state_specs(dense_specs: Any, table_spec: P) -> Any:
+def gr_state_specs(dense_specs: Any, table_spec: P,
+                   pend_spec: Optional[P] = None,
+                   with_shadow: bool = True) -> Any:
+    """master/shadow/accum share the table's sharding; the τ=1 pending
+    (id, row) pair buffers are batch-derived — pass ``pend_spec`` to shard
+    their leading dim over the data axes (default replicated). Pass
+    ``with_shadow=False`` for states built with ``qdtype=None`` (a
+    shadow=None leaf is absent from the pytree, so a spec leaf there
+    would be a structure mismatch at jit time)."""
+    from repro.embedding.tables import ShadowedTable
     from repro.training.trainer import GRTrainState
     from repro.training.optim import AdamWState
+    pend = pend_spec if pend_spec is not None else P()
+    pend_rows = P(*(tuple(pend) + (None,))) if pend_spec is not None else P()
     return GRTrainState(
         dense=dense_specs,
         dense_opt=AdamWState(mu=dense_specs, nu=dense_specs, count=P()),
-        table=table_spec, table_accum=table_spec, pending_grad=table_spec,
+        table=ShadowedTable(master=table_spec,
+                            shadow=table_spec if with_shadow else None,
+                            accum=table_spec),
+        pending_ids=pend, pending_rows=pend_rows,
         step=P())
 
 

@@ -66,6 +66,25 @@ def _type_bytes(type_str: str) -> int:
                for m in _SHAPE_RE.finditer(type_str))
 
 
+def cost_dict(compiled) -> Dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` across jaxlib versions.
+
+    Newer jaxlibs return one flat dict; older ones return a list with one
+    dict per executable program (``dict(...)`` on that list crashes with
+    "dictionary update sequence element #0 has length N"). Merge the
+    per-program dicts (later programs win; there is one in practice).
+    """
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        out: Dict[str, float] = {}
+        for d in ca:
+            out.update(dict(d))
+        return out
+    return dict(ca)
+
+
 def collective_bytes(hlo_text: str) -> Dict[str, int]:
     """Sum *operand* bytes per collective kind from post-SPMD HLO text.
 

@@ -28,7 +28,8 @@ from repro.data.loader import GRLoader
 from repro.data.synthetic import SyntheticKuaiRand
 from repro.models.model_zoo import GRBundle
 from repro.training import checkpoint as CKPT
-from repro.training.trainer import gr_train_state, make_gr_train_step
+from repro.training.trainer import (gr_pending_slots, gr_train_state,
+                                    make_gr_train_step)
 
 
 def main():
@@ -84,8 +85,8 @@ def main():
 
     bundle = GRBundle(cfg)
     key = jax.random.PRNGKey(args.seed)
-    state = gr_train_state(bundle.init_dense(key), bundle.init_table(key))
-    n_dense = sum(x.size for x in jax.tree.leaves(state.dense))
+    dense = bundle.init_dense(key)
+    n_dense = sum(x.size for x in jax.tree.leaves(dense))
     print(f"[model] {cfg.name}: {n_dense/1e6:.2f}M dense params, "
           f"table {n_items}x{cfg.d_model}")
 
@@ -96,9 +97,9 @@ def main():
         # capped at max_seq_len, so live pairs scale with rows, not cap².
         attn_fn = make_attn_fn(block=128, max_row_len=args.max_seq_len)
 
-    loss_fn = lambda d, t, b: bundle.loss(
+    loss_fn = lambda d, t, b, **kw: bundle.loss(
         d, t, b, neg_mode=args.neg_mode, expansion=args.expansion,
-        attn_fn=attn_fn)
+        attn_fn=attn_fn, **kw)
     step_fn = jax.jit(make_gr_train_step(
         loss_fn, lr_dense=args.lr, lr_sparse=args.lr,
         semi_async=not args.no_semi_async))
@@ -106,8 +107,15 @@ def main():
     ckpt = CKPT.AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
     t0 = time.time()
     tokens_done = 0
+    state = None
     for i, batch in enumerate(loader.batches(args.steps)):
         nb = {k: jnp.asarray(v) for k, v in batch.items() if k != "weights"}
+        if state is None:
+            # presize the τ=1 pair buffers from the first batch — a (0,)
+            # pending state would force a second full XLA compile at
+            # step 1 when the buffers grow to their real size
+            state = gr_train_state(dense, bundle.init_table(key),
+                                   pending_slots=gr_pending_slots(nb))
         tokens_done += int(batch["offsets"][:, -1].sum())
         state, metrics = step_fn(state, nb)
         if (i + 1) % args.log_every == 0:

@@ -67,14 +67,24 @@ def rope_freqs(head_dim: int, theta: float) -> jax.Array:
 
 
 def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
-    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    """x: (..., S, H, hd); positions: broadcastable to (..., S).
+
+    The rotation is expressed as reshape-to-halves + stack on a fresh axis
+    rather than split + concatenate along hd: concatenating two slices of a
+    head-dim-sharded tensor miscompiles under the SPMD partitioner on some
+    jaxlib versions (values from the wrong shard), which broke the
+    sharded-vs-single train-step parity whenever wq/wk outputs were sharded
+    over the model axis. The halves layout and numerics are identical.
+    """
     hd = x.shape[-1]
+    half = hd // 2
     freqs = rope_freqs(hd, theta)                       # (hd/2,)
     ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
     cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
-    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
-    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
-    return out.astype(x.dtype)
+    xf = x.astype(jnp.float32).reshape(*x.shape[:-1], 2, half)
+    x1, x2 = xf[..., 0, :], xf[..., 1, :]
+    out = jnp.stack([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-2)
+    return out.reshape(x.shape).astype(x.dtype)
 
 
 # --------------------------------------------------------------------------

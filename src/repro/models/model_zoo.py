@@ -124,6 +124,8 @@ class GRBundle:
              neg_mode: str = "fused", expansion: int = 1,
              neg_segment: int = 128, fetch_dtype=jnp.float16,
              neg_impl: Optional[str] = None, attn_fn=None,
+             input_table: Optional[jax.Array] = None,
+             shadow: Optional[jax.Array] = None,
              remat: bool = True) -> jax.Array:
         """Sampled-softmax recall loss over a sharded jagged batch.
 
@@ -142,11 +144,19 @@ class GRBundle:
                  the Pallas work-list jagged-attention kernel on TPU with
                  a JaggedAttnPlan built once per step and shared by all
                  layers, the XLA blocked scan elsewhere.
+        input_table: table for the *input-side* lookup only (the sparse
+                 forward the §4.2.2 pipeline prefetches before the delayed
+                 sparse update lands — the trainer passes the one-step-
+                 stale master here). Loss-stage reads (labels, negatives)
+                 always use ``table``. Defaults to ``table``.
+        shadow: persistent half-precision shadow for the fused negative
+                 gather (§4.3.2 end to end); gradients flow to ``table``.
         """
         cfg = self.cfg
         lookup = lookup_fn or (lambda t, i: jnp.take(t, i, axis=0)
                                .astype(jnp.dtype(cfg.dtype)))
-        x = lookup(table, batch["ids"])                      # (G, cap, d)
+        in_table = table if input_table is None else input_table
+        x = lookup(in_table, batch["ids"])                   # (G, cap, d)
         h = GR.gr_hidden_sharded(dense_params, cfg, x, batch["offsets"],
                                  batch["timestamps"], attn_fn=attn_fn,
                                  remat=remat)
@@ -168,7 +178,7 @@ class GRBundle:
                 key=jax.random.PRNGKey(batch["rng"][0]), tau=tau,
                 valid=valid.reshape(-1), segment=neg_segment,
                 expansion=expansion, fetch_dtype=fetch_dtype,
-                impl=neg_impl)
+                shadow=shadow, impl=neg_impl)
         if neg_mode == "baseline":
             neg_emb = jnp.take(table, batch["neg_ids"], axis=0)  # (G,cap,R,d)
             logits = jax.vmap(partial(NS.neg_logits_baseline, tau=tau))(

@@ -29,10 +29,33 @@ import jax.numpy as jnp
 import msgpack
 import numpy as np
 
+from repro.embedding.tables import ShadowedTable, rebuild_shadow, strip_shadow
+
 
 def _leaves_with_paths(tree: Any):
     flat, treedef = jax.tree_util.tree_flatten(tree)
     return flat, treedef
+
+
+def _is_shadowed(x: Any) -> bool:
+    return isinstance(x, ShadowedTable)
+
+
+def _strip_shadows(tree: Any) -> Any:
+    """Replace every ShadowedTable's shadow with a 0-row placeholder so the
+    checkpoint stores the master once (dtype marker kept, bytes dropped;
+    leaf count unchanged)."""
+    return jax.tree_util.tree_map(
+        lambda t: strip_shadow(t) if _is_shadowed(t) else t,
+        tree, is_leaf=_is_shadowed)
+
+
+def _rebuild_shadows(tree: Any) -> Any:
+    """Recompute ``shadow = master.astype(qdtype)`` for every restored
+    ShadowedTable (placeholder or stale shadow alike)."""
+    return jax.tree_util.tree_map(
+        lambda t: rebuild_shadow(t) if _is_shadowed(t) else t,
+        tree, is_leaf=_is_shadowed)
 
 
 def _savable(a: np.ndarray) -> np.ndarray:
@@ -45,8 +68,13 @@ def _savable(a: np.ndarray) -> np.ndarray:
 
 def save(ckpt_dir: str, step: int, tree: Any,
          meta: Optional[Dict] = None) -> str:
-    """Synchronous atomic save. Returns the step directory."""
+    """Synchronous atomic save. Returns the step directory.
+
+    ShadowedTable nodes are saved with a 0-row shadow placeholder —
+    checkpoints never double-store what ``restore`` rebuilds from the
+    master."""
     os.makedirs(ckpt_dir, exist_ok=True)
+    tree = _strip_shadows(tree)
     flat, treedef = _leaves_with_paths(tree)
     host = [np.asarray(jax.device_get(x)) for x in flat]
 
@@ -93,9 +121,10 @@ class AsyncCheckpointer:
                    meta: Optional[Dict] = None) -> None:
         self.wait()
         # snapshot on the caller thread (cheap device->host copy); the
-        # training loop may then mutate its arrays freely.
+        # training loop may then mutate its arrays freely. Shadows are
+        # stripped before the copy — no point snapshotting derived bytes.
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
-                                 tree)
+                                 _strip_shadows(tree))
 
         def work():
             try:
@@ -129,7 +158,9 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 def restore(ckpt_dir: str, template: Any, step: Optional[int] = None,
             shardings: Optional[Any] = None) -> Any:
     """Restore into ``template``'s structure. ``shardings`` (same pytree
-    structure or a single sharding) reshards onto the current mesh."""
+    structure or a single sharding) reshards onto the current mesh.
+    ShadowedTable shadows (stored as 0-row placeholders) are rebuilt from
+    the restored master."""
     step = latest_step(ckpt_dir) if step is None else step
     if step is None:
         raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
@@ -149,4 +180,4 @@ def restore(ckpt_dir: str, template: Any, step: Optional[int] = None,
                for a, t, s in zip(arrs, flat_t, flat_s)]
     else:
         out = [jnp.asarray(a).astype(t.dtype) for a, t in zip(arrs, flat_t)]
-    return jax.tree_util.tree_unflatten(treedef, out)
+    return _rebuild_shadows(jax.tree_util.tree_unflatten(treedef, out))

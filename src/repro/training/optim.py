@@ -13,6 +13,8 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.embedding.tables import ShadowedTable
+
 
 class AdamWState(NamedTuple):
     mu: Any
@@ -80,3 +82,48 @@ def adagrad_update(grads: Any, state: AdaGradState, params: Any, *,
     new_accum = jax.tree.map(lambda t: t[1], out,
                              is_leaf=lambda x: isinstance(x, tuple))
     return new_params, AdaGradState(accum=new_accum)
+
+
+def adagrad_sparse_update(table: ShadowedTable, ids: jax.Array,
+                          grad_rows: jax.Array, *, lr: float = 4e-3,
+                          eps: float = 1e-10,
+                          interpret: Optional[bool] = None) -> ShadowedTable:
+    """Row-sparse Eq.-1 AdaGrad over (id, grad-row) pairs.
+
+    ``ids`` (n,) int32 (< 0 = empty slot, duplicates allowed) and
+    ``grad_rows`` (n, D) are deduplicated through the jagged_lookup
+    sorted-runsum (table-major sort + run-sum, unique ids at run ends),
+    then master, accumulator and shadow are rewritten at *only the touched
+    rows* — the dense (V, D) update this replaces rewrote every row just
+    to change the few thousand a batch references, and rebuilding the
+    whole shadow each step would forfeit the §4.3.2 bandwidth saving.
+
+    Numerics are identical to :func:`adagrad_update` on the touched rows
+    (same fp32 ops in the same order); untouched rows are bit-unchanged,
+    preserving the ``shadow == master.astype(qdtype)`` invariant globally.
+    """
+    if ids.shape[0] == 0:
+        return table
+    from repro.kernels.jagged_lookup.ops import dedup_rows
+    uids, sums = dedup_rows(grad_rows.astype(jnp.float32), ids,
+                            interpret=interpret)
+    V = table.master.shape[0]
+    keep = (uids >= 0) & (uids < V)
+    safe = jnp.where(keep, uids, 0)
+    g = sums * keep[:, None]
+    s_new = table.accum[safe] + g * g
+    delta = -lr * g * jax.lax.rsqrt(s_new + eps)
+    dest = jnp.where(keep, uids, V)                     # V = dropped
+    master = table.master.at[dest].add(
+        jnp.where(keep[:, None], delta, 0.0), mode="drop")
+    accum = table.accum.at[dest].add(
+        jnp.where(keep[:, None], g * g, 0.0), mode="drop")
+    shadow = table.shadow
+    if shadow is not None:
+        # re-gather the rows the scatter actually wrote: recomputing
+        # master[safe] + delta here can differ by an ulp when XLA fuses
+        # the two delta uses differently, silently breaking the bitwise
+        # shadow == master.astype(qdtype) invariant
+        shadow = shadow.at[dest].set(
+            master[safe].astype(shadow.dtype), mode="drop")
+    return ShadowedTable(master=master, shadow=shadow, accum=accum)

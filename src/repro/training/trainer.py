@@ -10,8 +10,18 @@
   (HSP sparse-exchange or dense baseline), jagged dense model, sampled-
   softmax recall loss (§4.3 modes; the default is the fused ID-driven
   megakernel path, whose custom VJP delivers the table gradient through
-  the sorted run-sum scatter), AdamW on dense params, Eq.-1 AdaGrad
-  on the table, optionally τ=1 semi-async sparse updates (§4.2.2).
+  the sorted run-sum scatter), AdamW on dense params, sparse row-wise
+  Eq.-1 AdaGrad on the ShadowedTable (fp32 master + §4.3.2 fp16 shadow),
+  optionally τ=1 semi-async sparse updates (§4.2.2).
+
+Semi-async staleness accounting (§4.2.2, Fig. 8): the sparse gradient of
+batch t is exchanged/applied during batch t+1's dense stream. The only
+table read that predates it landing is the *prefetched input-side lookup*
+(issued before the update completes — that read is one step stale); the
+loss-stage reads (labels, negatives, gathered at the tail of the dense
+forward) see the updated rows. Delaying those too — the previous
+behaviour — widened the staleness window by a step and over-penalized the
+τ=1 trajectory.
 """
 from __future__ import annotations
 
@@ -23,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core import semi_async as SA
+from repro.embedding import tables as ET
 from repro.training import optim as O
 
 Params = Any
@@ -95,51 +106,113 @@ def make_lm_train_step(loss_fn: Callable[[Params, Batch], jax.Array], *,
 class GRTrainState(NamedTuple):
     dense: Params
     dense_opt: O.AdamWState
-    table: jax.Array
-    table_accum: jax.Array          # AdaGrad S (Eq. 1)
-    pending_grad: jax.Array         # τ=1 delayed sparse grad (§4.2.2)
+    table: ET.ShadowedTable         # fp32 master + fp16 shadow + AdaGrad S
+    pending_ids: jax.Array          # (N,) int32, −1 = empty (τ=1, §4.2.2)
+    pending_rows: jax.Array         # (N, D) fp32 delayed sparse grad rows
     step: jax.Array
 
 
 def gr_train_state(dense: Params, table: jax.Array,
-                   opt_dtype=jnp.float32) -> GRTrainState:
+                   opt_dtype=jnp.float32, *, qdtype=jnp.float16,
+                   pending_slots: int = 0) -> GRTrainState:
+    """``table`` is the fp32 master; a ``qdtype`` shadow (None = disabled)
+    is derived from it. ``pending_slots`` presizes the τ=1 delayed-grad
+    pair buffers — 0 lets the first train step size them from the batch
+    (one extra jit compile in a steady-shape loop)."""
+    tbl = table.master if isinstance(table, ET.ShadowedTable) else table
+    st = (table if isinstance(table, ET.ShadowedTable)
+          else ET.make_shadowed(tbl, qdtype=qdtype))
     return GRTrainState(
         dense=dense, dense_opt=O.adamw_init(dense, opt_dtype),
-        table=table,
-        table_accum=jnp.zeros_like(table, jnp.float32),
-        pending_grad=jnp.zeros_like(table, jnp.float32),
+        table=st,
+        pending_ids=jnp.full((pending_slots,), -1, jnp.int32),
+        pending_rows=jnp.zeros((pending_slots, tbl.shape[1]), jnp.float32),
         step=jnp.zeros((), jnp.int32))
 
 
-def make_gr_train_step(loss_fn: Callable[[Params, jax.Array, Batch],
-                                         jax.Array], *,
+def gr_pending_slots(batch: Batch) -> int:
+    """Static size of the τ=1 pending (id, row) pair buffers for a batch:
+    one candidate per table read (input ids + labels + negatives). Pass to
+    :func:`gr_train_state` to presize the state (required for AOT-compiled
+    steps, avoids one recompile for jitted loops)."""
+    return int(batch["ids"].size + batch["labels"].size
+               + batch["neg_ids"].size)
+
+
+def _table_grad_pairs(gt: jax.Array, batch: Batch, vocab: int):
+    """Dense table grad → deduplicated sparse (id, grad-row) pairs.
+
+    Every table read happens at the batch's candidate ids (input ids,
+    labels, negative ids), so those rows cover the grad's support exactly.
+    Duplicates are collapsed by a first-occurrence mask over the sorted
+    candidate list (−1 sentinels elsewhere), giving unique ids whose
+    gathered rows are the already-aggregated per-row gradients.
+    """
+    cand = jnp.concatenate([
+        batch["ids"].reshape(-1), batch["labels"].reshape(-1),
+        batch["neg_ids"].reshape(-1)]).astype(jnp.int32)
+    cand = jnp.clip(cand, 0, vocab - 1)
+    s = jnp.sort(cand)
+    first = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
+    uids = jnp.where(first, s, -1)
+    rows = gt[jnp.where(first, s, 0)] * first[:, None]
+    return uids, rows.astype(jnp.float32)
+
+
+def make_gr_train_step(loss_fn: Callable[..., jax.Array], *,
                        lr_dense: float = 4e-3, lr_sparse: float = 4e-3,
                        semi_async: bool = True):
-    """loss_fn(dense_params, table, batch) → scalar (built from
-    GRBundle.loss with the lookup/neg-sampling modes already bound; the
-    default "fused" mode keeps the whole negative path out of HBM and its
-    table grad arrives pre-reduced from sparse (id, row) pairs)."""
+    """loss_fn(dense_params, table, batch, *, input_table=None,
+    shadow=None) → scalar (built from GRBundle.loss with the
+    lookup/neg-sampling modes already bound; the default "fused" mode
+    keeps the whole negative path out of HBM, gathers negatives from the
+    half-precision ``shadow``, and its table grad arrives pre-reduced from
+    sparse (id, row) pairs).
+
+    semi_async=True is the τ=1 schedule: last step's sparse (id, row)
+    pairs land first (their exchange overlapped this step's dense
+    stream), then the forward runs with the stale master feeding only the
+    prefetched input lookup. The sparse optimizer is
+    :func:`repro.training.optim.adagrad_sparse_update` — master, shadow
+    and accumulator are rewritten at touched rows only.
+    """
 
     def train_step(state: GRTrainState, batch: Batch):
-        (loss, _), (gd, gt) = jax.value_and_grad(
-            lambda d, t: (loss_fn(d, t, batch), 0.0),
-            argnums=(0, 1), has_aux=True)(state.dense, state.table)
+        tbl = state.table
+        vocab = tbl.master.shape[0]
+
+        if semi_async:
+            # 1) delayed τ=1 sparse update lands (overlaps the dense
+            #    stream in the real system; zero pairs on step 0)
+            fresh = O.adagrad_sparse_update(
+                tbl, state.pending_ids, state.pending_rows, lr=lr_sparse)
+            # 2) forward/backward: only the prefetched input-side lookup
+            #    reads the stale master; labels/negatives see fresh rows
+            (loss, _), (gd, g_stale, g_fresh) = jax.value_and_grad(
+                lambda d, ts, tf: (loss_fn(d, tf, batch, input_table=ts,
+                                           shadow=fresh.shadow), 0.0),
+                argnums=(0, 1, 2), has_aux=True)(
+                    state.dense, tbl.master, fresh.master)
+            gt = (g_stale + g_fresh).astype(jnp.float32)
+            p_ids, p_rows = _table_grad_pairs(gt, batch, vocab)
+            new_table = fresh
+        else:
+            (loss, _), (gd, gt) = jax.value_and_grad(
+                lambda d, t: (loss_fn(d, t, batch, input_table=None,
+                                      shadow=tbl.shadow), 0.0),
+                argnums=(0, 1), has_aux=True)(state.dense, tbl.master)
+            uids, rows = _table_grad_pairs(gt.astype(jnp.float32), batch,
+                                           vocab)
+            new_table = O.adagrad_sparse_update(tbl, uids, rows,
+                                                lr=lr_sparse)
+            p_ids = jnp.full_like(uids, -1)
+            p_rows = jnp.zeros_like(rows)
 
         new_dense, new_opt = O.adamw_update(
             gd, state.dense_opt, state.dense, lr=lr_dense, weight_decay=0.0)
 
-        gt = gt.astype(jnp.float32)
-        if semi_async:
-            # apply last step's sparse grad; stash this one (τ = 1)
-            apply_g, pending = state.pending_grad, gt
-        else:
-            apply_g, pending = gt, jnp.zeros_like(gt)
-        accum = state.table_accum + apply_g * apply_g
-        new_table = (state.table - lr_sparse * apply_g
-                     * jax.lax.rsqrt(accum + 1e-10)).astype(state.table.dtype)
-
-        return (GRTrainState(new_dense, new_opt, new_table, accum,
-                             pending, state.step + 1),
+        return (GRTrainState(new_dense, new_opt, new_table,
+                             p_ids, p_rows, state.step + 1),
                 {"loss": loss})
 
     return train_step

@@ -276,6 +276,36 @@ def test_plan_block_mismatch_raises():
                          plan=plan, interpret=True)
 
 
+def test_overlong_row_clamps_worklist_and_debug_raises():
+    """A row longer than max_row_len must not corrupt the work-list: the
+    live count is clamped to the static bound (list stays well-formed,
+    nondecreasing destinations) and debug_checks turns it into an error."""
+    cap, block = 512, 64
+    lens = [400, 80]                       # 400 ≫ the declared bound of 64
+    offsets = jnp.asarray([0, 400, 480], jnp.int32)
+    ts = jnp.zeros((cap,), jnp.int32)
+    plan = build_attn_plan(offsets, ts, cap, block=block, max_row_len=64)
+    P = plan.num_pairs
+    assert P < num_pairs_bound(cap // block, block, 2, None, True), \
+        "bound must actually be tighter than dense for the test to bite"
+    n_live = int(plan.n_live[0])
+    assert n_live <= P, (n_live, P)        # the runtime clamp
+    # well-formed despite overflow: destinations nondecreasing, tail
+    # replicates a real pair, flags mark run boundaries
+    dests = np.asarray(plan.q_wl[:, 0])
+    assert (np.diff(dests) >= 0).all()
+    kdests = np.asarray(plan.kv_wl[:, 1])
+    assert (np.diff(kdests) >= 0).all()
+    # debug mode: eager offsets → immediate raise
+    with pytest.raises(ValueError, match="exceeds"):
+        build_attn_plan(offsets, ts, cap, block=block, max_row_len=64,
+                        debug_checks=True)
+    # rows within the bound: debug mode is silent
+    ok_off = jnp.asarray([0, 60, 120], jnp.int32)
+    build_attn_plan(ok_off, ts, cap, block=block, max_row_len=64,
+                    debug_checks=True)
+
+
 # --------------------------------------------------------------------------
 # one-per-step planning through the model stack
 # --------------------------------------------------------------------------

@@ -9,6 +9,7 @@ import pytest
 from spmd_util import run_spmd
 
 
+@pytest.mark.slow_spmd
 def test_lm_train_step_parity_sharded_vs_single():
     out = run_spmd("""
         import json, jax, jax.numpy as jnp, numpy as np
@@ -60,6 +61,7 @@ def test_lm_train_step_parity_sharded_vs_single():
     assert out["dparams"] < 1e-3, out
 
 
+@pytest.mark.slow_spmd
 def test_moe_arch_parity_sharded_vs_single():
     out = run_spmd("""
         import json, jax, jax.numpy as jnp, numpy as np

@@ -8,6 +8,7 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -34,8 +35,8 @@ def test_full_gr_stack_loss_decreases():
     key = jax.random.PRNGKey(0)
     state = gr_train_state(b.init_dense(key), b.init_table(key))
     step = jax.jit(make_gr_train_step(
-        lambda d, t, bt: b.loss(d, t, bt, neg_mode="segmented",
-                                neg_segment=64, expansion=2)))
+        lambda d, t, bt, **kw: b.loss(d, t, bt, neg_mode="segmented",
+                                      neg_segment=64, expansion=2, **kw)))
     losses = []
     for batch in loader.batches(6):
         nb = {k: jnp.asarray(v) for k, v in batch.items() if k != "weights"}
@@ -63,6 +64,7 @@ def test_train_driver_cli():
         assert os.path.exists(os.path.join(d, "LATEST"))
 
 
+@pytest.mark.slow_spmd
 def test_dryrun_single_cell_small_mesh():
     """The dry-run machinery itself (build → lower → compile → roofline) on
     an 8-device mesh via subprocess."""
@@ -97,7 +99,7 @@ def test_dryrun_single_cell_small_mesh():
             j = jax.jit(step, in_shardings=(PT.to_named(mesh, sspecs),
                                             PT.to_named(mesh, bspecs)))
             compiled = j.lower(state_sds, batch).compile()
-        cost = dict(compiled.cost_analysis() or {})
+        cost = RL.cost_dict(compiled)
         rl = RL.analyze(cfg, shape, "test2x4", mesh.size, cost,
                         compiled.as_text())
         print(json.dumps({"flops": rl.hlo_flops, "bytes": rl.hlo_bytes,

@@ -76,8 +76,8 @@ def _gr_setup(semi_async):
     key = jax.random.PRNGKey(0)
     state = gr_train_state(b.init_dense(key), b.init_table(key))
     step = jax.jit(make_gr_train_step(
-        lambda d, t, bt: b.loss(d, t, bt, neg_mode="segmented",
-                                neg_segment=32),
+        lambda d, t, bt, **kw: b.loss(d, t, bt, neg_mode="segmented",
+                                      neg_segment=32, **kw),
         semi_async=semi_async))
 
     def batch(i):
