@@ -6,10 +6,13 @@ Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 """
 import argparse
 import importlib
+import os
 import sys
 import traceback
 
-MODULES = [
+# preferred (paper) order; discovered bench_*.py modules not listed here
+# are appended alphabetically so new benchmarks are picked up automatically
+_ORDERED = [
     "benchmarks.bench_table1_e2e",
     "benchmarks.bench_fig2_jagged_fusion",
     "benchmarks.bench_table2_lookup",
@@ -21,6 +24,19 @@ MODULES = [
     "benchmarks.bench_fig12_quant",
     "benchmarks.bench_table8_logit_sharing",
 ]
+
+
+def discover_modules():
+    # _ORDERED entries are kept even if their file went missing — the
+    # import then fails loudly in main()'s per-module handler instead of
+    # a stale rename silently dropping a row from the sweep
+    here = os.path.dirname(os.path.abspath(__file__))
+    found = sorted(f"benchmarks.{f[:-3]}" for f in os.listdir(here)
+                   if f.startswith("bench_") and f.endswith(".py"))
+    return _ORDERED + [m for m in found if m not in _ORDERED]
+
+
+MODULES = discover_modules()
 
 
 def main() -> None:

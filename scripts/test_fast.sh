@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Fast test tier: everything except the subprocess SPMD tests (each spawns
+# 8 fake host devices and spends minutes in XLA compile). Run this on every
+# iteration; run scripts/test_full.sh before merging.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q -m "not slow_spmd" "$@"

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Full (tier-1) test suite, including the slow subprocess SPMD tests —
+# the command ROADMAP.md names as the merge gate.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest -x -q "$@"

@@ -58,6 +58,24 @@ def token_aware_batches(lengths: Sequence[int], num_devices: int,
             w += 1
         out[w].append(i)
         loads[w] += int(ln)
+    # Edge case: one over-budget sequence can eat a whole device's budget
+    # and leave trailing devices empty (an empty per-device jagged batch
+    # breaks SPMD callers that assume ≥1 sample everywhere). Clamp by
+    # draining the tail of the most-loaded multi-sample device into each
+    # empty one — the partition property is preserved; only the tail
+    # absorber's arrival-order contiguity is relaxed.
+    if len(lengths) >= num_devices:
+        for w in range(num_devices):
+            if out[w]:
+                continue
+            donor = max(range(num_devices),
+                        key=lambda d: (len(out[d]) > 1, loads[d]))
+            if len(out[donor]) <= 1:
+                break               # nothing movable (shouldn't happen)
+            moved = out[donor].pop()
+            loads[donor] -= int(lengths[moved])
+            out[w].append(moved)
+            loads[w] += int(lengths[moved])
     return out
 
 

@@ -60,6 +60,13 @@ class GRLoader:
 
     def make_batch(self, batch_users: List[int]) -> Dict[str, np.ndarray]:
         G, cap = self.num_devices, self.capacity
+        # single-event users yield zero next-item pairs; drop them BEFORE
+        # assignment so the per-device balance, the ≥1-sample clamp, and
+        # the sample-count gradient weights all see the rows that are
+        # actually packed (a post-assignment drop could leave an all-pad
+        # device with nonzero weight)
+        batch_users = [u for u in batch_users
+                       if len(self.sequences[u][0]) >= 2]
         assign = self._assign(batch_users)
         ids = np.zeros((G, cap), np.int32)
         labels = np.zeros((G, cap), np.int32)

@@ -108,6 +108,16 @@ def rebuild_shadow(t: ShadowedTable) -> ShadowedTable:
     return t._replace(shadow=t.master.astype(t.shadow.dtype))
 
 
+def live_shadow(t: ShadowedTable) -> Optional[jax.Array]:
+    """The shadow iff it is usable as a gather/scan source: present and
+    full-size (a checkpoint-stripped 0-row placeholder is not). Callers
+    that can run on either table (the fused negative gather, the serving
+    retrieval scan) use this instead of re-deriving the check."""
+    if t.shadow is not None and t.shadow.shape[0] == t.master.shape[0]:
+        return t.shadow
+    return None
+
+
 def shadow_consistent(t: ShadowedTable) -> jax.Array:
     """True iff the shadow invariant holds exactly (debug/test helper)."""
     if t.shadow is None:

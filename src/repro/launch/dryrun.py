@@ -91,7 +91,11 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool):
                                    pending_slots=n_pend))
         dspecs = PT.gr_param_specs(state_sds.dense, mesh, plan)
         tspec = PT.gr_table_spec(mesh, plan)
-        sspecs = PT.gr_state_specs(dspecs, tspec)
+        # shard the τ=1 pending (id, row-grad) pair buffers over the data
+        # axes (batch-derived, ROADMAP item) instead of the replicated
+        # default; run_cell asserts the spec landed in the report
+        sspecs = PT.gr_state_specs(dspecs, tspec,
+                                   pend_spec=PT.gr_pend_spec(mesh, n_pend))
         bspecs = PT.batch_specs(cfg, shape, mesh, plan, inputs)["batch"]
         dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
         lookup = make_hsp_lookup(
@@ -192,6 +196,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     rec = {
         "arch": arch, "shape": shape_name, "mesh": mesh_name,
         "chips": mesh.size, "ok": True,
+    }
+    if cfg.gr:
+        pend = arg_specs[0].pending_ids
+        # a replicated fallback renders as P() or P(None) — both must trip
+        assert any(ax is not None for ax in tuple(pend)), \
+            "GR τ=1 pending buffers must be sharded over the data axes"
+        rec["pend_spec"] = str(pend)
+    rec |= {
         "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
         "plan": plan.notes, "num_microbatches": plan.num_microbatches,
         "memory_analysis": mem,

@@ -258,6 +258,18 @@ def gr_table_spec(mesh: Mesh, plan: Plan) -> P:
     return P(axes, None)
 
 
+def gr_pend_spec(mesh: Mesh, n_pend: int) -> P:
+    """τ=1 pending (id, row-grad) pair buffers: the pair dim is batch-
+    derived (ids+labels+negatives of one step), so it shards over the
+    data axes like the batch itself — replicating it costs a full
+    (N, D) fp32 buffer per chip at production shapes. Falls back to
+    replicated when ``n_pend`` does not divide the data-axis size."""
+    dp = _dp_axes(mesh)
+    if not dp:
+        return P()
+    return _guard(mesh, (n_pend,), (dp,))
+
+
 # --------------------------------------------------------------------------
 # batch / cache / state specs
 # --------------------------------------------------------------------------

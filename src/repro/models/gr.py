@@ -101,3 +101,43 @@ def gr_hidden_sharded(params: Params, cfg: ArchConfig, x: jax.Array,
     """Batched over shards: x (G, cap, d), offsets (G, B+1), ts (G, cap)."""
     fn = partial(gr_hidden, params, cfg, attn_fn=attn_fn, remat=remat)
     return jax.vmap(fn)(x, offsets, timestamps)
+
+
+# --------------------------------------------------------------------------
+# serving-mode entry points (repro.serving)
+# --------------------------------------------------------------------------
+
+def gr_serve_hidden(params: Params, cfg: ArchConfig, x: jax.Array,
+                    offsets: jax.Array, timestamps: jax.Array,
+                    *, attn_fn: Optional[Callable] = None) -> jax.Array:
+    """Inference-mode hidden states over one jagged pack: same forward as
+    training but without activation rematerialization (nothing is
+    differentiated at serving time, so checkpointing would only re-run the
+    blocks). The attention plan is still built once per micro-batch and
+    shared by every layer."""
+    return gr_hidden(params, cfg, x, offsets, timestamps,
+                     attn_fn=attn_fn, remat=False)
+
+
+def gr_user_embeddings(params: Params, cfg: ArchConfig, x: jax.Array,
+                       offsets: jax.Array, timestamps: jax.Array,
+                       last_pos: jax.Array,
+                       *, attn_fn: Optional[Callable] = None) -> jax.Array:
+    """Recall-serving user representations: the hidden state at each
+    sequence's last token. x (cap, d), last_pos (S,) → (S, d). Rows past a
+    pack's live sequences gather slot ``last_pos[j]`` verbatim — callers
+    (the serving engine's slot map) ignore them."""
+    h = gr_serve_hidden(params, cfg, x, offsets, timestamps, attn_fn=attn_fn)
+    return jnp.take(h, last_pos, axis=0)
+
+
+def gr_user_embeddings_sharded(params: Params, cfg: ArchConfig,
+                               x: jax.Array, offsets: jax.Array,
+                               timestamps: jax.Array, last_pos: jax.Array,
+                               *, attn_fn: Optional[Callable] = None
+                               ) -> jax.Array:
+    """Batched over serving shards: x (G, cap, d), last_pos (G, S) →
+    (G, S, d)."""
+    fn = lambda xx, oo, tt, lp: gr_user_embeddings(
+        params, cfg, xx, oo, tt, lp, attn_fn=attn_fn)
+    return jax.vmap(fn)(x, offsets, timestamps, last_pos)

@@ -1,0 +1,26 @@
+"""Batched jagged recall serving — the inference side of the GR system.
+
+Three layers (see each module's docstring):
+
+  * :mod:`repro.serving.scheduler` — request admission + capacity-bounded
+    jagged micro-batch packing (LPT over serving shards, deadline flush);
+  * :mod:`repro.serving.state_cache` — incremental per-user history
+    (ring-buffer truncation at max_seq_len) + versioned embedding cache;
+  * :mod:`repro.serving.retrieval` — sharded blocked top-k over the FP16
+    shadow table (fp32 full scoring kept as the parity oracle);
+
+assembled by :class:`repro.serving.engine.RecallEngine`.
+"""
+from repro.serving.engine import RecallEngine, ServeResult
+from repro.serving.retrieval import (ShardedTopK, bytes_per_query,
+                                     table_scan_bytes, topk_blocked,
+                                     topk_dense)
+from repro.serving.scheduler import (MicroBatch, RequestScheduler,
+                                     ServeRequest, Slot)
+from repro.serving.state_cache import UserState, UserStateCache
+
+__all__ = [
+    "RecallEngine", "ServeResult", "RequestScheduler", "MicroBatch",
+    "ServeRequest", "Slot", "UserState", "UserStateCache", "ShardedTopK",
+    "topk_blocked", "topk_dense", "table_scan_bytes", "bytes_per_query",
+]

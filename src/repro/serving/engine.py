@@ -1,0 +1,285 @@
+"""Batched recall-serving engine: scheduler → cached jagged encode →
+sharded quantized top-k.
+
+One :class:`RecallEngine` owns the full serving path for a trained GR
+model:
+
+  1. ``submit`` merges a request's new events into the incremental user-
+     state cache (``state_cache.UserStateCache``). Unchanged users with a
+     version-current embedding are **cache hits** — they skip packing and
+     encoding entirely. Changed/new users enqueue their (ring-buffer-
+     truncated) history with the request scheduler.
+  2. ``step`` flushes the scheduler into capacity-bounded jagged micro-
+     batches (LPT over the G serving shards) and runs the jitted serving
+     forward — embedding lookup + ``gr_user_embeddings_sharded`` — once
+     per micro-batch. The attention plan (``build_attn_plan``) is built
+     once per micro-batch inside the forward and shared by every layer,
+     exactly as in training. Encoded embeddings are written back to the
+     cache.
+  3. Requests needing a ranking are scored together by the sharded top-k
+     scan over the FP16 shadow table (``retrieval.ShardedTopK``); cache
+     hits whose top-k is version-current skip even that (the model and
+     table are static, so the cached ranking is bit-identical) — a pure
+     hit never touches the table. Results come back in submission order
+     with per-request latency stamped into the scheduler's records.
+
+Shapes are static per engine: (G, cap) packs and bucketed retrieval batch
+sizes, so steady-state serving runs two compiled programs (encode,
+retrieve) regardless of traffic mix.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.embedding import tables as ET
+from repro.models import gr as GR
+from repro.serving.retrieval import ShardedTopK
+from repro.serving.scheduler import RequestScheduler
+from repro.serving.state_cache import UserStateCache
+
+
+@dataclass
+class ServeResult:
+    rid: int
+    user: int
+    item_ids: np.ndarray      # (k,) int32, score-descending
+    scores: np.ndarray        # (k,) fp32
+    user_emb: np.ndarray      # (d,) the representation that was ranked
+    cache_hit: bool
+
+
+def _bucket(n: int) -> int:
+    """Next power-of-two ≥ n: bounds retrieval recompiles to log₂ sizes."""
+    b = 1
+    while b < n:
+        b <<= 1
+    return b
+
+
+class RecallEngine:
+    """Serving engine over a trained (dense params, ShadowedTable) pair."""
+
+    def __init__(self, cfg: ArchConfig, dense: Any, table: Any, *,
+                 num_shards: int = 1, users_per_shard: int = 8,
+                 tokens_per_shard: Optional[int] = None,
+                 k: int = 100, retrieval_block: int = 4096,
+                 use_shadow: bool = True, max_delay_ms: float = 10.0,
+                 attn_fn: Optional[Callable] = None,
+                 cache_users: Optional[int] = None):
+        self.cfg = cfg
+        self.dense = dense
+        if isinstance(table, ET.ShadowedTable):
+            self.table = table
+        else:
+            # serving-only construction from a raw master: no (V, D) fp32
+            # AdaGrad accumulator (only the training optimizer reads it),
+            # and the fp16 shadow only if retrieval will scan it — dead
+            # state at production vocab sizes otherwise
+            self.table = ET.ShadowedTable(
+                master=table,
+                shadow=table.astype(jnp.float16) if use_shadow else None,
+                accum=jnp.zeros((0, table.shape[-1]), jnp.float32))
+        self.k = k
+        self.num_shards = num_shards
+        self.users_per_shard = users_per_shard
+        self.scheduler = RequestScheduler(
+            num_shards, users_per_shard, cfg.max_seq_len,
+            tokens_per_shard=tokens_per_shard, max_delay_ms=max_delay_ms)
+        self.cache = UserStateCache(cfg.max_seq_len, max_users=cache_users)
+        self.retriever = ShardedTopK(
+            k, block_v=min(retrieval_block, self.table.master.shape[0]),
+            use_shadow=use_shadow)
+        # (rid, user, embedding, cached top-k or None, version) — all
+        # snapshotted at submit time so a later LRU eviction (or a
+        # same-user append) between submit and step cannot corrupt a
+        # recorded hit
+        self._hits: List[Tuple[int, int, np.ndarray,
+                               Optional[Tuple[np.ndarray, np.ndarray]],
+                               int]] = []
+        # rid → history version the request's encode was snapshotted at;
+        # store() stamps this so events that arrive while an encode is in
+        # flight (or a same-user request later in the pack) can never be
+        # masked by a stale embedding marked fresh
+        self._snap_version: Dict[int, int] = {}
+        self.encoded_batches = 0
+        self.retrieval_batches = 0
+
+        if attn_fn is None:
+            attn_fn = GR.default_attn_fn(cfg)
+        dtype = jnp.dtype(cfg.dtype)
+
+        def encode(dense_p, master, ids, offsets, ts, last_pos):
+            x = ET.lookup(master, ids, dtype=dtype)           # (G, cap, d)
+            return GR.gr_user_embeddings_sharded(
+                dense_p, cfg, x, offsets, ts, last_pos, attn_fn=attn_fn)
+
+        self._encode = jax.jit(encode)
+
+    # -- request side ------------------------------------------------------
+    def submit(self, user: int, new_ids: Sequence[int] = (),
+               new_ts: Sequence[int] = (), *,
+               now: Optional[float] = None) -> int:
+        """Merge new events for ``user`` and enqueue if re-encoding is
+        needed; returns the request id.
+
+        Raises KeyError for a user whose cached state was LRU-evicted:
+        a delta cannot reconstruct their history, and silently re-seeding
+        from the delta would serve garbage recommendations. The flag
+        clears on the rejection, so the client's retry with the full
+        history re-seeds normally."""
+        if self.cache.get(user) is None:
+            # reject before touching the cache: a failed insert would
+            # still create a UserState (skewing the miss count and, with
+            # an LRU bound, possibly evicting a warm user)
+            if self.cache.take_evicted(user):
+                raise KeyError(
+                    f"user {user}: cached state was evicted — resend the "
+                    f"full history")
+            if np.asarray(new_ids).size == 0:
+                raise ValueError(f"user {user}: request with no history")
+        st, needs_encode = self.cache.update(user, new_ids, new_ts)
+        if not needs_encode:
+            rid = self.scheduler.record_hit(user, now=now)
+            self._hits.append((rid, user, st.fresh_embedding(),
+                               st.fresh_topk(), st.version))
+            return rid
+        ids, ts = st.history()
+        if ids.size == 0:
+            raise ValueError(f"user {user}: request with no history")
+        rid = self.scheduler.submit(user, ids, ts, now=now)
+        self._snap_version[rid] = st.version
+        return rid
+
+    # -- serving step ------------------------------------------------------
+    def step(self, *, force: bool = False,
+             now: Optional[float] = None) -> List[ServeResult]:
+        """Encode + rank everything currently servable. The encode queue
+        packs only when the flush policy fires (or ``force=True``); cache
+        hits need no encode, so they are always servable and never wait on
+        the batching policy. Returns results in submission (rid) order."""
+        run_flush = force or self.scheduler.ready(now)
+        if not (run_flush or self._hits):
+            return []
+        # pending: (rid, user, hit, emb, snap_version) → needs the table
+        # scan; done: finished ServeResults (hits with a version-current
+        # cached top-k skip retrieval entirely — with a static model and
+        # table their ranking is bit-identical to recomputing it)
+        pending: List[Tuple[int, int, bool, np.ndarray, Optional[int]]] = []
+        results: List[ServeResult] = []
+        if run_flush:
+            # dispatch every micro-batch before the first device→host
+            # copy: jax dispatch is async, so encode k+1 overlaps the
+            # transfer of k instead of serializing behind it
+            mbs = self.scheduler.flush(now)
+            outs = []
+            for mb in mbs:
+                outs.append(self._encode(
+                    self.dense, self.table.master,
+                    jnp.asarray(mb.ids), jnp.asarray(mb.offsets),
+                    jnp.asarray(mb.timestamps), jnp.asarray(mb.last_pos)))
+                self.encoded_batches += 1
+            for mb, out in zip(mbs, outs):
+                out = np.asarray(out)
+                for s in mb.slots:
+                    # copy, not view: caching a view would pin the whole
+                    # (G, S, d) batch buffer for as long as any one of
+                    # its users stays cached
+                    e = out[s.shard, s.row].copy()
+                    ver = self._snap_version.pop(s.rid, None)
+                    self.cache.store(s.user, e, ver)
+                    pending.append((s.rid, s.user, False, e, ver))
+        for rid, user, emb, topk, ver in self._hits:
+            if topk is not None:
+                # hand the caller copies — these arrays live in the cache,
+                # and a caller sorting/mutating its result in place must
+                # not corrupt the next hit's "bit-identical" ranking
+                results.append(ServeResult(rid=rid, user=user,
+                                           item_ids=topk[0].copy(),
+                                           scores=topk[1].copy(),
+                                           user_emb=emb.copy(),
+                                           cache_hit=True))
+            else:
+                pending.append((rid, user, True, emb, ver))
+        self._hits = []
+        if not (pending or results):
+            return []
+
+        if pending:
+            B = len(pending)
+            d = pending[0][3].shape[-1]
+            E = np.zeros((_bucket(B), d), np.float32)
+            E[:B] = np.stack([p[3] for p in pending]).astype(np.float32)
+            vals, idx = self.retriever(self.table, jnp.asarray(E))
+            self.retrieval_batches += 1
+            vals = np.asarray(vals[:B])
+            idx = np.asarray(idx[:B])
+            for i, (rid, user, hit, emb, ver) in enumerate(pending):
+                self.cache.store_topk(user, idx[i], vals[i], ver)
+                # emb is the cached object — results get their own copy
+                results.append(ServeResult(rid=rid, user=user,
+                                           item_ids=idx[i], scores=vals[i],
+                                           user_emb=emb.copy(),
+                                           cache_hit=hit))
+
+        done = time.monotonic() if now is None else now
+        self.scheduler.mark_done([r.rid for r in results], now=done)
+        results.sort(key=lambda r: r.rid)
+        return results
+
+    def serve(self, requests: Sequence[Tuple[int, Sequence[int],
+                                             Sequence[int]]], *,
+              now: Optional[float] = None) -> List[ServeResult]:
+        """Synchronous convenience: submit ``(user, new_ids, new_ts)``
+        triples, force one step, return results in request order.
+
+        Atomic with respect to bad input: every request is validated
+        before any is enqueued, so a rejected batch strands nothing in
+        the queue and a later serve() returns exactly one result per
+        request (zipping requests to results positionally stays safe)."""
+        evicted: List[int] = []
+        seeded: set = set()     # users given history EARLIER in this batch
+        for user, ids, ts in requests:
+            n_ids = np.asarray(ids, np.int32).size
+            n_ts = np.asarray(ts, np.int32).size
+            if n_ids != n_ts:
+                raise ValueError(f"user {user}: event delta mismatch: "
+                                 f"{n_ids} ids, {n_ts} ts")
+            if self.cache.get(user) is None and user not in seeded:
+                if self.cache.is_evicted(user):
+                    evicted.append(user)
+                elif n_ids == 0:
+                    raise ValueError(
+                        f"user {user}: request with no history")
+            if n_ids or self.cache.get(user) is not None:
+                seeded.add(user)
+        if evicted:
+            # consume the one-rejection handshake only for the users this
+            # batch is actually rejected over — their retry re-seeds
+            for u in evicted:
+                self.cache.take_evicted(u)
+            raise KeyError(f"users {evicted}: cached state was evicted — "
+                           f"resend the full histories")
+        # pin the batch against LRU eviction: new users inserted by
+        # earlier submits must not evict later members of the same batch
+        # (which would turn their validated state into a mid-batch
+        # KeyError and strand the earlier requests in the queue)
+        with self.cache.pinned(u for u, _, _ in requests):
+            for user, ids, ts in requests:
+                self.submit(user, ids, ts, now=now)
+            return self.step(force=True, now=now)
+
+    # -- accounting --------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        out = {"latency": self.scheduler.latency_stats(),
+               "cache": self.cache.stats(),
+               "encoded_batches": self.encoded_batches,
+               "retrieval_table_dtype":
+                   str(self.retriever.scan_table(self.table).dtype)}
+        return out

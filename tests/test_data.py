@@ -2,8 +2,6 @@
 jagged loader."""
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
 
 from repro.data.kuairand import (drop_negative, five_core_filter,
                                  group_sequences, leave_one_out,
@@ -95,6 +93,49 @@ def test_loader_batches_valid(strategy):
         assert batch["neg_ids"].max() < n_items
         w = batch["weights"]
         assert abs(w.sum() - 1.0) < 1e-5
+
+
+def test_loader_token_scaling_no_empty_device():
+    """Regression: one sequence longer than the per-device token budget
+    used to leave later devices with an empty assignment (and an all-pad
+    jagged batch). Every device must pack ≥1 sequence."""
+    rng = np.random.default_rng(9)
+    seqs = {}
+    for u in range(16):
+        n = 120 if u == 0 else 4        # user 0 eats a whole budget
+        items = rng.integers(0, 500, n + 1)
+        seqs[u] = (items, np.arange(n + 1))
+    loader = GRLoader(seqs, num_devices=4, users_per_device=4,
+                      max_seq_len=128, num_negatives=4, num_items=500,
+                      strategy="token_scaling", seed=0)
+    for batch in loader.batches(4):
+        assert (batch["offsets"][:, -1] > 0).all(), \
+            batch["offsets"][:, -1]
+
+
+@pytest.mark.parametrize("strategy", ["token_scaling", "token_realloc"])
+def test_loader_drops_single_event_users_before_assignment(strategy):
+    """Users with one event yield zero next-item pairs — they must be
+    dropped BEFORE assignment so no device ends up all-pad and the
+    sample-count weights match what was actually packed. ("fixed" is the
+    deliberately-naive baseline: it may leave trailing devices empty when
+    a draw has fewer trainable users than device slots.)"""
+    rng = np.random.default_rng(11)
+    seqs = {}
+    for u in range(16):
+        n = 1 if u % 2 == 0 else 6     # half the users are untrainable
+        items = rng.integers(0, 300, n)
+        seqs[u] = (items, np.arange(n))
+    loader = GRLoader(seqs, num_devices=2, users_per_device=4,
+                      max_seq_len=32, num_negatives=4, num_items=300,
+                      strategy=strategy, seed=0)
+    for batch in loader.batches(3):
+        tails = batch["offsets"][:, -1]
+        assert (tails > 0).all(), tails
+        # weights reflect packed rows only (no weight for dropped users)
+        counts = (np.diff(batch["offsets"], axis=1) > 0).sum(axis=1)
+        np.testing.assert_allclose(batch["weights"],
+                                   counts / counts.sum(), atol=1e-6)
 
 
 def test_loader_token_realloc_balances():

@@ -1,12 +1,14 @@
 """§4.1.3 load balancing — Table 3 properties."""
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+
+try:        # only the two property tests need hypothesis; the rest of the
+    from hypothesis import given, settings, strategies as st  # module runs
+    HAVE_HYPOTHESIS = True                                    # without it
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import load_balance as LB
-
-lens_strategy = st.lists(st.integers(1, 2048), min_size=8, max_size=64)
 
 
 def _check_partition(assign, n):
@@ -14,28 +16,43 @@ def _check_partition(assign, n):
     assert got == list(range(n)), "every sample assigned exactly once"
 
 
-@settings(max_examples=30, deadline=None)
-@given(lengths=lens_strategy, workers=st.integers(2, 8))
-def test_lpt_partition_and_bound(lengths, workers):
-    a = LB.global_token_reallocation(lengths, workers)
-    _check_partition(a, len(lengths))
-    loads = [sum(lengths[i] for i in w) for w in a]
-    # LPT guarantee: makespan <= mean + max item
-    assert max(loads) <= int(np.ceil(np.mean(loads))) + max(lengths)
+if HAVE_HYPOTHESIS:
+    lens_strategy = st.lists(st.integers(1, 2048), min_size=8, max_size=64)
 
+    @settings(max_examples=30, deadline=None)
+    @given(lengths=lens_strategy, workers=st.integers(2, 8))
+    def test_lpt_partition_and_bound(lengths, workers):
+        a = LB.global_token_reallocation(lengths, workers)
+        _check_partition(a, len(lengths))
+        loads = [sum(lengths[i] for i in w) for w in a]
+        # LPT guarantee: makespan <= mean + max item
+        assert max(loads) <= int(np.ceil(np.mean(loads))) + max(lengths)
 
-@settings(max_examples=30, deadline=None)
-@given(lengths=lens_strategy, workers=st.integers(2, 8))
-def test_token_aware_partition(lengths, workers):
-    budget = int(np.ceil(sum(lengths) / workers))
-    a = LB.token_aware_batches(lengths, workers, budget)
-    _check_partition(a, len(lengths))
-    # no device except the tail absorber exceeds budget by more than one
-    # sample (the last worker takes the stream remainder by construction)
-    for w in a[:-1]:
-        load = sum(lengths[i] for i in w)
-        if len(w) > 1:
-            assert load - max(lengths[i] for i in w) < budget
+    @settings(max_examples=30, deadline=None)
+    @given(lengths=lens_strategy, workers=st.integers(2, 8))
+    def test_token_aware_partition(lengths, workers):
+        budget = int(np.ceil(sum(lengths) / workers))
+        a = LB.token_aware_batches(lengths, workers, budget)
+        _check_partition(a, len(lengths))
+        # no device except the tail absorber exceeds budget by more than
+        # one sample (the last worker takes the stream remainder); devices
+        # back-filled by the ≥1-sample clamp hold a single sample and are
+        # exempt by the len(w) > 1 guard
+        for w in a[:-1]:
+            load = sum(lengths[i] for i in w)
+            if len(w) > 1:
+                assert load - max(lengths[i] for i in w) < budget
+else:
+    # stubs keep the property tests visible as skips (hypothesis forbids
+    # @given over default-valued params, so the real bodies only exist
+    # when it is importable)
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_lpt_partition_and_bound():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_token_aware_partition():
+        pass
 
 
 def test_reallocation_beats_fixed_on_longtail():
@@ -66,3 +83,24 @@ def test_empty_and_degenerate():
     assert LB.global_token_reallocation([5], 4)[0] == [0]
     a = LB.token_aware_batches([1, 1, 1], 8, 10)
     _check_partition(a, 3)
+
+
+def test_token_aware_no_empty_device_on_budget_blowout():
+    """Regression: one over-budget sequence used to absorb a device's whole
+    budget and leave trailing devices empty. With ≥ num_devices samples,
+    every device must get ≥1 sample."""
+    lengths = [100, 1, 1, 1]
+    budget = int(np.ceil(sum(lengths) / 4))          # 26 < 100
+    a = LB.token_aware_batches(lengths, 4, budget)
+    _check_partition(a, 4)
+    assert all(len(w) >= 1 for w in a), a
+    # also under a long-tail mix where several sequences blow the budget
+    rng = np.random.default_rng(2)
+    lengths = rng.lognormal(4.0, 1.5, 32).astype(int) + 1
+    budget = int(np.ceil(lengths.sum() / 8))
+    a = LB.token_aware_batches(lengths, 8, budget)
+    _check_partition(a, 32)
+    assert all(len(w) >= 1 for w in a), [len(w) for w in a]
+    # fewer samples than devices: clamp impossible, partition still exact
+    a = LB.token_aware_batches([7, 9], 4, 8)
+    _check_partition(a, 2)
