@@ -14,12 +14,13 @@ import tempfile
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCHS, reduced
+from repro.data.synthetic import synth_jagged_batch
 from repro.models.model_zoo import get_bundle
 from repro.training.elastic import ElasticRunner
-from repro.training.trainer import gr_train_state, make_gr_train_step
+from repro.training.engine import make_gr_step_fn
+from repro.training.trainer import gr_train_state
 
 
 def main():
@@ -34,9 +35,12 @@ def main():
 
     def build_step(mesh):
         from repro.training.trainer import GRTrainState
-        raw = make_gr_train_step(
-            lambda d, t, b, **kw: bundle.loss(d, t, b, neg_mode="fused",
-                                              neg_segment=32, **kw))
+        # the engine's staged step (flat single-jit composition) — the
+        # same math GREngine pipelines, here wrapped for the dict-state
+        # checkpoint round-trip the elastic runner performs
+        raw = make_gr_step_fn(
+            bundle, loss_kwargs=dict(neg_mode="fused", neg_segment=32),
+            jit=False)
 
         @jax.jit
         def step(state_dict, batch):
@@ -45,17 +49,8 @@ def main():
         return step
 
     def data_fn(t, world):
-        k = jax.random.PRNGKey(t)
-        G, cap = 2, 128
-        return {
-            "ids": jax.random.randint(k, (G, cap), 0, 512),
-            "labels": jax.random.randint(k, (G, cap), 1, 512),
-            "timestamps": jnp.cumsum(
-                jax.random.randint(k, (G, cap), 0, 60), 1).astype(jnp.int32),
-            "offsets": jnp.asarray([[0, 64, 128], [0, 100, 120]], jnp.int32),
-            "neg_ids": jax.random.randint(k, (G, cap, 8), 0, 512),
-            "rng": jnp.zeros((2,), jnp.uint32),
-        }
+        return synth_jagged_batch(jax.random.PRNGKey(t), 2, 128, 512, 8,
+                                  offsets=[[0, 64, 128], [0, 100, 120]])
 
     with tempfile.TemporaryDirectory() as ckpt_dir:
         runner = ElasticRunner(build_step=build_step,

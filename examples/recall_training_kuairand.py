@@ -22,7 +22,8 @@ from repro.data.loader import GRLoader
 from repro.data.synthetic import SyntheticKuaiRand
 from repro.models.gr import gr_hidden
 from repro.models.model_zoo import get_bundle
-from repro.training.trainer import gr_train_state, make_gr_train_step
+from repro.training.engine import GREngine
+from repro.training.trainer import gr_train_state
 
 
 def evaluate_hr(dense, table, cfg, seqs, test, k=100, users=80):
@@ -63,17 +64,17 @@ def main():
         loader = GRLoader(seqs, num_devices=2, users_per_device=4,
                           max_seq_len=128, num_negatives=16,
                           num_items=n_items, seed=1)
-        step = jax.jit(make_gr_train_step(
-            lambda d, t, b, **kw: bundle.loss(d, t, b, neg_mode="fused",
-                                              neg_segment=64,
-                                              fetch_dtype=fetch_dtype,
-                                              expansion=2, **kw)))
-        for i, batch in enumerate(loader.batches(40)):
-            nb = {k2: jnp.asarray(v) for k2, v in batch.items()
-                  if k2 != "weights"}
-            state, m = step(state, nb)
+        # staged engine, pipelined Algorithm-1 schedule (bit-identical to
+        # the flat fused step — the training math is unchanged)
+        engine = GREngine(
+            bundle, loader, state=state,
+            loss_kwargs=dict(neg_mode="fused", neg_segment=64,
+                             fetch_dtype=fetch_dtype, expansion=2),
+            semi_async=True, schedule="algorithm1")
+        recs = engine.run(40)
+        state = engine.state
         hr = evaluate_hr(state.dense, state.table.master, cfg, seqs, test)
-        print(f"{fetch_name:22s} final loss {float(m['loss']):.4f}  "
+        print(f"{fetch_name:22s} final loss {recs[-1]['loss']:.4f}  "
               f"HR@100 {hr:.4f}")
     print("fp16 negative fetch tracks fp32 quality (paper Fig. 12)")
 

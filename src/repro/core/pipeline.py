@@ -19,6 +19,7 @@ Table 6's computing/communication/not-overlapped/free breakdown.
 """
 from __future__ import annotations
 
+import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
@@ -62,13 +63,18 @@ class SixStagePipeline:
         self.events: List[StageEvent] = []
         self._artifacts: Dict[Tuple[str, int], Any] = {}
         self._futures: Dict[Tuple[str, int], Future] = {}
+        # host hooks write artifacts/events from pool threads while the
+        # main thread reads and retires them
+        self._lock = threading.Lock()
 
     # -- plumbing ----------------------------------------------------------
     def _run(self, stage: str, i: int, *args) -> Any:
         t0 = time.perf_counter()
         out = getattr(self.hooks, stage)(i, *args)
-        self.events.append(StageEvent(stage, i, t0, time.perf_counter()))
-        self._artifacts[(stage, i)] = out
+        with self._lock:
+            self.events.append(StageEvent(stage, i, t0,
+                                          time.perf_counter()))
+            self._artifacts[(stage, i)] = out
         return out
 
     def _submit(self, stage: str, i: int, *args) -> None:
@@ -80,58 +86,98 @@ class SixStagePipeline:
         fut = self._futures.pop((stage, i), None)
         if fut is not None:
             return fut.result()
-        return self._artifacts.get((stage, i))
+        return self._get(stage, i)
 
     def _get(self, stage: str, i: int) -> Any:
-        return self._artifacts.get((stage, i))
+        with self._lock:
+            return self._artifacts.get((stage, i))
+
+    def _retire(self, upto: int) -> None:
+        """Drop artifacts of batches ≤ ``upto`` (every stage of those
+        batches has completed) so a long run doesn't accumulate per-batch
+        intermediates — grads, gathered rows — for its whole history."""
+        with self._lock:
+            for key in [k for k in self._artifacts if k[1] <= upto]:
+                del self._artifacts[key]
 
     # -- Algorithm 1 -------------------------------------------------------
     def run(self, num_steps: int) -> List[Any]:
-        """Run ``num_steps`` full training steps; returns dense_bwd outputs."""
-        results: List[Any] = []
-        # warmup: fill the pipeline for batches 0..4 (prologue)
-        for j in range(min(5, num_steps + 5)):
-            self._submit("dataload", j)
-        for j in range(min(4, num_steps + 4)):
-            d = self._wait("dataload", j)
-            self._submit("a2a", j, d)
-            self._submit("unique", j, self._wait("a2a", j))
-        for j in range(min(2, num_steps + 2)):
-            u = self._wait("unique", j)
-            self._run("emb_fwd", j, u)
-        if num_steps > 0:
-            self._run("dense_fwd", 0, self._get("emb_fwd", 0))
-            self._run("dense_bwd", 0, self._get("dense_fwd", 0))
-            results.append(self._get("dense_bwd", 0))
+        """Run ``num_steps`` full training steps; returns dense_bwd outputs.
 
-        for i in range(num_steps - 1):
-            # line 3: embedding backward for batch i
-            self._run("emb_bwd", i, self._get("dense_bwd", i))
-            # line 4: dense forward for batch i+1
-            if (ef := self._get("emb_fwd", i + 1)) is not None:
-                self._run("dense_fwd", i + 1, ef)
-            # line 5: start feature all-to-all for batch i+4 (non-blocking)
-            if (dl := self._wait("dataload", i + 4)) is not None:
-                self._submit("a2a", i + 4, dl)
-            # line 6: wait for host unique of batch i+3
-            self._wait("unique", i + 3)
-            # line 7: embedding forward for batch i+2
-            if (u := self._get("unique", i + 2)) is not None:
-                self._run("emb_fwd", i + 2, u)
-            # line 8: dense backward for batch i+1
-            if (df := self._get("dense_fwd", i + 1)) is not None:
-                self._run("dense_bwd", i + 1, df)
-                results.append(self._get("dense_bwd", i + 1))
-            # line 9: wait for feature all-to-all, start unique (host, async)
-            if (a := self._wait("a2a", i + 4)) is not None:
-                self._submit("unique", i + 4, a)
-            # line 10: dataloader for batch i+5
-            self._submit("dataload", i + 5)
-        if num_steps > 0:  # epilogue: drain the last embedding backward
-            self._run("emb_bwd", num_steps - 1,
-                      self._get("dense_bwd", num_steps - 1))
-        self.pool.shutdown(wait=False, cancel_futures=True)
+        Every stage submission is bounded to batch indices < num_steps:
+        the lookahead (dataload i+5, a2a i+4, unique i+4, emb_fwd i+2)
+        simply clamps at the horizon, so no hook is ever invoked for a
+        batch that won't be consumed, and the drain at the end joins —
+        never abandons — in-flight host work.
+        """
+        results: List[Any] = []
+        try:
+            # warmup: fill the pipeline for batches 0..4 (prologue)
+            for j in range(min(5, num_steps)):
+                self._submit("dataload", j)
+            for j in range(min(4, num_steps)):
+                d = self._wait("dataload", j)
+                self._submit("a2a", j, d)
+                self._submit("unique", j, self._wait("a2a", j))
+            for j in range(min(2, num_steps)):
+                u = self._wait("unique", j)
+                self._run("emb_fwd", j, u)
+            if num_steps > 0:
+                self._run("dense_fwd", 0, self._get("emb_fwd", 0))
+                self._run("dense_bwd", 0, self._get("dense_fwd", 0))
+                results.append(self._get("dense_bwd", 0))
+
+            for i in range(num_steps - 1):
+                # line 3: embedding backward for batch i
+                self._run("emb_bwd", i, self._get("dense_bwd", i))
+                # line 4: dense forward for batch i+1
+                if (ef := self._get("emb_fwd", i + 1)) is not None:
+                    self._run("dense_fwd", i + 1, ef)
+                # line 5: start feature all-to-all for batch i+4
+                if i + 4 < num_steps and \
+                        (dl := self._wait("dataload", i + 4)) is not None:
+                    self._submit("a2a", i + 4, dl)
+                # line 6: wait for host unique of batch i+3
+                if i + 3 < num_steps:
+                    self._wait("unique", i + 3)
+                # line 7: embedding forward for batch i+2 (join its unique
+                # explicitly — idempotent after the line-6 wait of the
+                # previous step; a bare _get would race the worker thread)
+                if i + 2 < num_steps and \
+                        (u := self._wait("unique", i + 2)) is not None:
+                    self._run("emb_fwd", i + 2, u)
+                # line 8: dense backward for batch i+1
+                if (df := self._get("dense_fwd", i + 1)) is not None:
+                    self._run("dense_bwd", i + 1, df)
+                    results.append(self._get("dense_bwd", i + 1))
+                # line 9: wait feature all-to-all, start unique (host)
+                if i + 4 < num_steps and \
+                        (a := self._wait("a2a", i + 4)) is not None:
+                    self._submit("unique", i + 4, a)
+                # line 10: dataloader for batch i+5
+                if i + 5 < num_steps:
+                    self._submit("dataload", i + 5)
+                self._retire(i)
+            if num_steps > 0:  # epilogue: drain the last embedding backward
+                self._run("emb_bwd", num_steps - 1,
+                          self._get("dense_bwd", num_steps - 1))
+        finally:
+            self._drain()
         return results
+
+    def _drain(self) -> None:
+        """Deterministic teardown: cancel what never started, join what
+        did (the bounded schedule above consumes every submission, so this
+        only has work to do on an exception path), then shut the pool down
+        synchronously — no host hook is left racing interpreter exit."""
+        for key in list(self._futures):
+            fut = self._futures.pop(key)
+            if not fut.cancel():
+                try:
+                    fut.result()
+                except Exception:
+                    pass          # the submitting run() already raised
+        self.pool.shutdown(wait=True)
 
 
 def timeline_report(events: List[StageEvent],

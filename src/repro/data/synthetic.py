@@ -66,3 +66,34 @@ class SyntheticKuaiRand:
         users = users or self.num_users
         parts = [self.interactions(u) for u in range(users)]
         return {k: np.concatenate([p[k] for p in parts]) for k in parts[0]}
+
+
+def synth_jagged_batch(key, num_shards: int, capacity: int, vocab: int,
+                       num_negatives: int, offsets=None):
+    """Random (G, cap) jagged GR training batch straight on the device —
+    the shared fixture for trainer/engine tests, benchmarks and examples
+    that need deterministic per-step batches without a loader.
+
+    ``offsets`` defaults to two equal samples per shard; pass an explicit
+    (G, S+1) array for ragged layouts. ``key`` is a jax PRNG key (vary it
+    per step for a data stream).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    G, cap = num_shards, capacity
+    if offsets is None:
+        offsets = jnp.tile(jnp.asarray([0, cap // 2, cap], jnp.int32),
+                           (G, 1))
+    else:
+        offsets = jnp.asarray(offsets, jnp.int32)
+    return {
+        "ids": jax.random.randint(key, (G, cap), 0, vocab),
+        "labels": jax.random.randint(key, (G, cap), 1, vocab),
+        "timestamps": jnp.cumsum(
+            jax.random.randint(key, (G, cap), 0, 60), 1).astype(jnp.int32),
+        "offsets": offsets,
+        "neg_ids": jax.random.randint(key, (G, cap, num_negatives),
+                                      0, vocab),
+        "rng": jnp.zeros((2,), jnp.uint32),
+    }

@@ -36,9 +36,9 @@ from repro.launch import partition as PT
 from repro.launch import roofline as RL
 from repro.launch.mesh import make_production_mesh
 from repro.models.model_zoo import get_bundle
+from repro.training.engine import make_gr_step_fn
 from repro.training.trainer import (gr_pending_slots, gr_train_state,
-                                    lm_train_state, make_gr_train_step,
-                                    make_lm_train_step)
+                                    lm_train_state, make_lm_train_step)
 
 
 def _sharded_bytes(sds_tree: Any, spec_tree: Any, mesh) -> int:
@@ -109,11 +109,16 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool):
         attn_fn = _partial(jagged_pointwise_attention_blocked,
                            block=plan.q_block,
                            score_dtype=jnp.dtype(plan.gr_score_dtype))
-        loss_fn = lambda d, t, b, **kw: bundle.loss(
-            d, t, b, lookup_fn=lookup, neg_mode="segmented",
-            neg_segment=plan.neg_segment, expansion=plan.neg_expansion,
-            attn_fn=attn_fn, remat=plan.remat, **kw)
-        step = make_gr_train_step(loss_fn, semi_async=True)
+        # the engine's staged step: lookup_fn (HSP sparse exchange) keeps
+        # the input gather inside the dense stage, so the lowered HLO
+        # carries exactly the collectives the plan claims
+        step = make_gr_step_fn(
+            bundle,
+            loss_kwargs=dict(lookup_fn=lookup, neg_mode="segmented",
+                             neg_segment=plan.neg_segment,
+                             expansion=plan.neg_expansion,
+                             attn_fn=attn_fn, remat=plan.remat),
+            semi_async=True, jit=False)
         jitted = jax.jit(step, in_shardings=(
             PT.to_named(mesh, sspecs), PT.to_named(mesh, bspecs)))
         args = (state_sds, inputs["batch"])

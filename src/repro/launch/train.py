@@ -3,7 +3,10 @@
 Runs the full stack on whatever devices exist: synthetic-KuaiRand data →
 Appendix-A preprocessing → load-balanced jagged loader → HSTU/FuXi dense
 backbone + embedding table → sampled-softmax recall loss (§4.3 modes) →
-AdamW + Eq.-1 AdaGrad (optionally τ=1 semi-async) → async checkpoints.
+AdamW + Eq.-1 AdaGrad (optionally τ=1 semi-async) → async checkpoints,
+all executed by the staged engine (§4.2.3 Algorithm 1 by default;
+``--schedule flat`` runs the same stages serially with identical
+numerics).
 
 CPU example (a ~100M-dense-param model, a few hundred steps):
     PYTHONPATH=src python -m repro.launch.train --arch hstu-large \
@@ -16,11 +19,10 @@ On a TPU pod slice the same entrypoint shards over the production mesh
 from __future__ import annotations
 
 import argparse
+import math
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_arch
 from repro.data.kuairand import preprocess_log
@@ -28,8 +30,7 @@ from repro.data.loader import GRLoader
 from repro.data.synthetic import SyntheticKuaiRand
 from repro.models.model_zoo import GRBundle
 from repro.training import checkpoint as CKPT
-from repro.training.trainer import (gr_pending_slots, gr_train_state,
-                                    make_gr_train_step)
+from repro.training.engine import GREngine
 
 
 def main():
@@ -45,6 +46,9 @@ def main():
                     choices=["fixed", "token_scaling", "token_realloc"])
     ap.add_argument("--neg-mode", default="fused",
                     choices=["baseline", "segmented", "fused"])
+    ap.add_argument("--schedule", default="algorithm1",
+                    choices=["algorithm1", "flat"],
+                    help="staged pipeline (Algorithm 1) vs serial stages")
     ap.add_argument("--expansion", type=int, default=1)
     ap.add_argument("--no-semi-async", action="store_true")
     ap.add_argument("--use-kernel", action="store_true",
@@ -85,8 +89,9 @@ def main():
 
     bundle = GRBundle(cfg)
     key = jax.random.PRNGKey(args.seed)
-    dense = bundle.init_dense(key)
-    n_dense = sum(x.size for x in jax.tree.leaves(dense))
+    # count params from shapes only — the engine materializes the state
+    dense_sds = jax.eval_shape(bundle.init_dense, key)
+    n_dense = sum(math.prod(x.shape) for x in jax.tree.leaves(dense_sds))
     print(f"[model] {cfg.name}: {n_dense/1e6:.2f}M dense params, "
           f"table {n_items}x{cfg.d_model}")
 
@@ -97,39 +102,37 @@ def main():
         # capped at max_seq_len, so live pairs scale with rows, not cap².
         attn_fn = make_attn_fn(block=128, max_row_len=args.max_seq_len)
 
-    loss_fn = lambda d, t, b, **kw: bundle.loss(
-        d, t, b, neg_mode=args.neg_mode, expansion=args.expansion,
-        attn_fn=attn_fn, **kw)
-    step_fn = jax.jit(make_gr_train_step(
-        loss_fn, lr_dense=args.lr, lr_sparse=args.lr,
-        semi_async=not args.no_semi_async))
-
     ckpt = CKPT.AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
     t0 = time.time()
-    tokens_done = 0
-    state = None
-    for i, batch in enumerate(loader.batches(args.steps)):
-        nb = {k: jnp.asarray(v) for k, v in batch.items() if k != "weights"}
-        if state is None:
-            # presize the τ=1 pair buffers from the first batch — a (0,)
-            # pending state would force a second full XLA compile at
-            # step 1 when the buffers grow to their real size
-            state = gr_train_state(dense, bundle.init_table(key),
-                                   pending_slots=gr_pending_slots(nb))
-        tokens_done += int(batch["offsets"][:, -1].sum())
-        state, metrics = step_fn(state, nb)
+    tally = {"tokens": 0}
+
+    def on_step(i, rec, state):
+        tally["tokens"] += rec["tokens"]
         if (i + 1) % args.log_every == 0:
-            loss = float(metrics["loss"])
             dt = time.time() - t0
-            print(f"step {i+1:5d}  loss {loss:.4f}  "
-                  f"{tokens_done/dt:,.0f} tok/s  "
+            print(f"step {i+1:5d}  loss {rec['loss']:.4f}  "
+                  f"{tally['tokens']/dt:,.0f} tok/s  "
                   f"{(i+1)/dt:.2f} steps/s", flush=True)
         if ckpt and (i + 1) % args.ckpt_every == 0:
             ckpt.save_async(i + 1, state._asdict())
+
+    engine = GREngine(
+        bundle, loader,
+        loss_kwargs=dict(neg_mode=args.neg_mode, expansion=args.expansion,
+                         attn_fn=attn_fn),
+        lr_dense=args.lr, lr_sparse=args.lr,
+        semi_async=not args.no_semi_async, schedule=args.schedule,
+        seed=args.seed, step_callback=on_step)
+    results = engine.run(args.steps)
     if ckpt:
         ckpt.wait()
-    print(f"[done] {args.steps} steps in {time.time()-t0:.1f}s, "
-          f"final loss {float(metrics['loss']):.4f}")
+    r = engine.timeline_report()
+    print(f"[timeline] computing {100*r.get('computing_ratio', 0):.1f}%  "
+          f"comm-not-overlapped "
+          f"{100*r.get('comm_not_overlapped_ratio', 0):.2f}%  "
+          f"free {100*r.get('free_ratio', 0):.1f}%")
+    final = f"final loss {results[-1]['loss']:.4f}" if results else "no steps"
+    print(f"[done] {args.steps} steps in {time.time()-t0:.1f}s, {final}")
 
 
 if __name__ == "__main__":

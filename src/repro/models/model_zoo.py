@@ -119,12 +119,25 @@ class GRBundle:
                                         self.cfg.d_model), jnp.float32)
                 * 0.02)
 
+    def input_gather(self, table: jax.Array, batch: Batch, *,
+                     lookup_fn: Optional[Callable] = None) -> jax.Array:
+        """The input-side lookup as a standalone pipeline stage (the
+        ``emb_fwd`` stage of Algorithm 1): exactly the gather :meth:`loss`
+        would perform for ``batch["ids"]``, so a precomputed result can be
+        passed back via ``x_emb=`` without changing a single bit. Without
+        ``lookup_fn`` this is a plain take + cast, which is linear — the
+        staged trainer transposes it to recover the input-side table grad."""
+        lookup = lookup_fn or (lambda t, i: jnp.take(t, i, axis=0)
+                               .astype(jnp.dtype(self.cfg.dtype)))
+        return lookup(table, batch["ids"])
+
     def loss(self, dense_params: Params, table: jax.Array, batch: Batch, *,
              lookup_fn: Optional[Callable] = None,
              neg_mode: str = "fused", expansion: int = 1,
              neg_segment: int = 128, fetch_dtype=jnp.float16,
              neg_impl: Optional[str] = None, attn_fn=None,
              input_table: Optional[jax.Array] = None,
+             x_emb: Optional[jax.Array] = None,
              shadow: Optional[jax.Array] = None,
              remat: bool = True) -> jax.Array:
         """Sampled-softmax recall loss over a sharded jagged batch.
@@ -149,14 +162,25 @@ class GRBundle:
                  sparse update lands — the trainer passes the one-step-
                  stale master here). Loss-stage reads (labels, negatives)
                  always use ``table``. Defaults to ``table``.
+        x_emb: precomputed input-side embeddings (the ``emb_fwd`` pipeline
+                 stage's output, from :meth:`input_gather`). When given,
+                 the input lookup is skipped entirely and the input-side
+                 table gradient is delivered by the caller transposing the
+                 gather — this is how the staged execution engine threads
+                 the prefetched (one-step-stale) rows into the dense
+                 stage. Mutually exclusive with ``input_table``.
         shadow: persistent half-precision shadow for the fused negative
                  gather (§4.3.2 end to end); gradients flow to ``table``.
         """
         cfg = self.cfg
         lookup = lookup_fn or (lambda t, i: jnp.take(t, i, axis=0)
                                .astype(jnp.dtype(cfg.dtype)))
-        in_table = table if input_table is None else input_table
-        x = lookup(in_table, batch["ids"])                   # (G, cap, d)
+        if x_emb is not None:
+            assert input_table is None, "x_emb replaces the input lookup"
+            x = x_emb                                        # (G, cap, d)
+        else:
+            in_table = table if input_table is None else input_table
+            x = lookup(in_table, batch["ids"])               # (G, cap, d)
         h = GR.gr_hidden_sharded(dense_params, cfg, x, batch["offsets"],
                                  batch["timestamps"], attn_fn=attn_fn,
                                  remat=remat)

@@ -1,0 +1,350 @@
+"""Staged GR execution engine — Algorithm 1 (§4.2.3) on real work.
+
+:class:`GREngine` is the single training entrypoint for the GR workload:
+it wires the jagged loader, the host unique stage and the staged train
+step (:func:`repro.training.trainer.make_gr_stages`) into the six-stage
+pipeline executor, so the model actually executes Algorithm 1 — host
+stages (dataload, candidate unique) on the executor's thread pool,
+device stages (emb_fwd, dense fwd/bwd, emb_bwd) async-dispatched on the
+main thread — and every :class:`repro.core.pipeline.StageEvent` comes
+from real work, which is what lets ``timeline_report`` reproduce
+Table 6's computing / comm / not-overlapped / free breakdown on the real
+workload instead of a sleep simulator.
+
+Stage mapping (single-process JAX; hook names are Algorithm 1's):
+
+    dataload   GRLoader / data_fn → numpy jagged batch       (host pool)
+    a2a        host→device feature transfer of the batch      (host pool)
+    unique     candidate-id dedup sort (host_unique_candidates,
+               the per-shard dedup hsp.unique_accumulate runs
+               before the sparse gradient exchange)           (host pool)
+    emb_fwd    input-side table gather — the τ=1-stale
+               prefetched read (§4.2.2)                       (device)
+    dense_fwd  jagged model fwd + fused sampled-softmax loss
+               + grads, async-dispatched                      (device)
+    dense_bwd  realization of the dispatched fwd+bwd          (device)
+    emb_bwd    _table_grad_pairs + AdamW + row-sparse AdaGrad (device)
+
+The τ=1 carry is an explicit cross-batch artifact: ``dense_bwd(i)``'s
+sparse (id, row) pairs land on the table in ``emb_bwd(i)`` (Algorithm 1
+line 3), one statement before ``dense_fwd(i+1)`` — while ``emb_fwd(i+1)``
+already gathered its input rows a step earlier, which is exactly the
+one-step-stale input read of the semi-async schedule. With
+``schedule="flat"`` the same stage functions run serially one batch at a
+time (the pre-engine loop); both schedules are bit-identical to the
+fused single-jit :func:`make_gr_train_step` — losses and the final
+:class:`GRTrainState` (master, shadow, AdaGrad accum, pending pairs)
+match exactly, sync and τ=1.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import (PipelineHooks, SixStagePipeline, StageEvent,
+                                 timeline_report as _timeline_report)
+from repro.training.trainer import (GRTrainState, gr_pending_slots,
+                                    gr_train_state, host_unique_candidates,
+                                    make_gr_stages, make_gr_train_step)
+
+SCHEDULES = ("algorithm1", "flat")
+
+
+def _bundle_loss_fn(bundle, loss_kwargs: Optional[Dict[str, Any]]):
+    lk = dict(loss_kwargs or {})
+    return lambda d, t, b, **kw: bundle.loss(d, t, b, **lk, **kw)
+
+
+def _input_gather_for(bundle, loss_kwargs: Optional[Dict[str, Any]]):
+    """The staged input gather, or None when it must stay inline: a custom
+    ``lookup_fn`` (e.g. the HSP sparse exchange) is a custom-vjp function
+    the emb_bwd stage cannot linearly transpose, so its gather is
+    differentiated inside the dense stage instead. One rule, shared by
+    the flat oracle and the pipelined engine — they must never disagree
+    on dataflow mode."""
+    if dict(loss_kwargs or {}).get("lookup_fn") is not None:
+        return None
+    return lambda t, b: bundle.input_gather(t, b)
+
+
+def make_gr_step_fn(bundle, *, loss_kwargs: Optional[Dict[str, Any]] = None,
+                    lr_dense: float = 4e-3, lr_sparse: float = 4e-3,
+                    semi_async: bool = True, jit: bool = True):
+    """The engine's flat fused train step as a standalone
+    ``(state, batch) -> (state, metrics)`` function.
+
+    This is the single-jit composition of the Algorithm-1 stage functions
+    — what ``GREngine(schedule="flat")`` computes and what the pipelined
+    schedule is verified bit-identical against. Entrypoints that need a
+    bare step (the elastic runner, the multi-pod dry-run) build it here
+    so every trainer in the repo shares one staged implementation.
+    """
+    lk = dict(loss_kwargs or {})
+    input_gather = _input_gather_for(bundle, lk)
+    step = make_gr_train_step(_bundle_loss_fn(bundle, lk),
+                              lr_dense=lr_dense, lr_sparse=lr_sparse,
+                              semi_async=semi_async,
+                              input_gather=input_gather)
+    return jax.jit(step) if jit else step
+
+
+class GREngine:
+    """Unified staged training engine for the GR workload.
+
+    Parameters
+    ----------
+    bundle: ``GRBundle`` (model + loss).
+    data: a ``GRLoader`` (its ``batches(steps)`` iterator feeds the
+        dataload stage) or a callable ``data_fn(i) -> batch`` producing
+        deterministic per-step batches.
+    state: optional pre-built :class:`GRTrainState`; default builds one
+        from ``bundle`` on the first batch (presizing the τ=1 pair
+        buffers via :func:`gr_pending_slots`).
+    loss_kwargs: bound into ``bundle.loss`` (neg_mode, expansion,
+        attn_fn, lookup_fn, ...).
+    schedule: "algorithm1" (six-stage pipelined execution) or "flat"
+        (same stages, serial per step).
+    step_callback: optional ``fn(i, record, state)`` invoked after each
+        ``emb_bwd`` (logging, checkpointing). ``state`` is always the
+        carry-convention snapshot (τ=1 pairs pending, pre-landing table)
+        — identical to what the fused step would hold after step ``i``,
+        so a checkpoint taken from any schedule resumes bit-identically.
+
+    ``run(steps)`` returns a list of per-step records
+    ``{"step", "loss", "tokens"}``; ``events`` holds the run's
+    :class:`StageEvent` trace and :meth:`timeline_report` reduces it to
+    the Table-6 breakdown.
+    """
+
+    def __init__(self, bundle, data, *, state: Optional[GRTrainState] = None,
+                 seed: int = 0, loss_kwargs: Optional[Dict[str, Any]] = None,
+                 lr_dense: float = 4e-3, lr_sparse: float = 4e-3,
+                 semi_async: bool = True, schedule: str = "algorithm1",
+                 qdtype=jnp.float16, workers: int = 3,
+                 step_callback: Optional[Callable] = None):
+        if schedule not in SCHEDULES:
+            raise ValueError(f"schedule must be one of {SCHEDULES}")
+        self.bundle = bundle
+        self.loader = None if callable(data) else data
+        self._data_fn = data if callable(data) else None
+        self.state = state
+        self.seed = seed
+        self.semi_async = semi_async
+        self.schedule = schedule
+        self.qdtype = qdtype
+        self.workers = workers
+        self.step_callback = step_callback
+        self.events: List[StageEvent] = []
+
+        lk = dict(loss_kwargs or {})
+        input_gather = _input_gather_for(bundle, lk)
+        self._x_mode = semi_async and input_gather is not None
+        stages = make_gr_stages(_bundle_loss_fn(bundle, lk),
+                                lr_dense=lr_dense, lr_sparse=lr_sparse,
+                                semi_async=semi_async,
+                                input_gather=input_gather)
+        self.stages = stages
+        self._j_emb_fwd = jax.jit(stages.emb_fwd)
+        self._j_dense = jax.jit(stages.dense_fwd_bwd)
+        self._j_emb_bwd = jax.jit(stages.emb_bwd,
+                                  static_argnames=("apply_sparse",))
+        self._j_sparse_apply = jax.jit(stages.sparse_apply)
+        self._dlock = threading.Lock()
+
+    # -- data --------------------------------------------------------------
+    def _batch(self, i: int):
+        """Deterministic index → batch mapping, safe under the executor's
+        thread pool (dataload futures may run out of order)."""
+        with self._dlock:
+            while i >= len(self._bcache):
+                j = len(self._bcache)
+                self._bcache.append(self._data_fn(j)
+                                    if self._data_fn is not None
+                                    else next(self._batch_iter))
+            return self._bcache[i]
+
+    # -- per-run setup -----------------------------------------------------
+    def _prepare_run(self, steps: int):
+        self._batch_iter = (self.loader.batches(steps)
+                            if self.loader is not None else None)
+        self._bcache: List[Any] = []
+        self._arts: Dict[int, Dict[str, Any]] = {}
+        self.events = []
+        self._run_last = steps - 1
+        first = self._batch(0)
+        if self.state is None:
+            key = jax.random.PRNGKey(self.seed)
+            self.state = gr_train_state(
+                self.bundle.init_dense(key), self.bundle.init_table(key),
+                qdtype=self.qdtype, pending_slots=gr_pending_slots(first))
+        # τ=1 pairs left pending by a previous run (or restored from a
+        # checkpoint) land mid-prologue: after emb_fwd(0) — whose input
+        # read is one step stale, exactly as the fused step orders it —
+        # and before emb_fwd(1) / dense_fwd(0).
+        self._leftover = (self.semi_async
+                          and self.state.pending_ids.shape[0] > 0
+                          and bool((np.asarray(self.state.pending_ids)
+                                    >= 0).any()))
+
+    def _land_pending(self):
+        st = self.state
+        table = self._j_sparse_apply(st.table, st.pending_ids,
+                                     st.pending_rows)
+        self.state = st._replace(
+            table=table,
+            pending_ids=jnp.full_like(st.pending_ids, -1),
+            pending_rows=jnp.zeros_like(st.pending_rows))
+
+    def _maybe_land_leftover(self, i: int, stage: str):
+        if not self._leftover:
+            return
+        if stage == "emb_fwd" and i == 0:
+            return                      # batch 0's input read stays stale
+        self._land_pending()
+        self._leftover = False
+
+    # -- Algorithm-1 hooks -------------------------------------------------
+    def _hk_dataload(self, i: int):
+        return self._batch(i)
+
+    def _hk_a2a(self, i: int, nb):
+        # feature exchange: the host→device transfer of the jagged batch
+        dev = {k: jnp.asarray(v) for k, v in nb.items() if k != "weights"}
+        jax.block_until_ready(dev)
+        return {"np": nb, "dev": dev}
+
+    def _hk_unique(self, i: int, art):
+        vocab = self.bundle.cfg.vocab_size
+        if self.state is not None:
+            vocab = self.state.table.master.shape[0]
+        s, first = host_unique_candidates(art["np"], vocab)
+        return {**art, "cand": (jnp.asarray(s), jnp.asarray(first))}
+
+    def _hk_emb_fwd(self, i: int, art):
+        self._maybe_land_leftover(i, "emb_fwd")
+        st = self.state
+        if self._x_mode:
+            x = self._j_emb_fwd(st.table.master, art["dev"])
+            return {**art, "x": x}
+        if self.semi_async:
+            # custom lookup_fn (e.g. HSP): the gather stays in the dense
+            # stage; prefetching = capturing the stale master reference
+            return {**art, "stale_master": st.table.master}
+        return art
+
+    def _hk_dense_fwd(self, i: int, art):
+        self._maybe_land_leftover(i, "dense_fwd")
+        st = self.state
+        dout = self._j_dense(st.dense, st.table, art["dev"],
+                             art.get("x"), art.get("stale_master"))
+        self._arts[i] = {**art, "dout": dout}
+        return {"i": i}
+
+    def _hk_dense_bwd(self, i: int, art):
+        full = self._arts[i]
+        loss = float(full["dout"].loss)   # realize the dispatched fwd+bwd
+        tokens = int(np.asarray(full["np"]["offsets"])[:, -1].sum())
+        return {"step": i, "loss": loss, "tokens": tokens}
+
+    def _hk_emb_bwd(self, i: int, rec, *, defer_sparse: bool = False):
+        full = self._arts.pop(i)
+        st = self.state
+        cand_s, cand_f = full["cand"]
+        if self.semi_async:
+            # checkpoints/callbacks always see the carry-convention
+            # snapshot (pending pairs + pre-landing table — what the
+            # fused step leaves in state, and the only resume-equivalent
+            # form), regardless of schedule
+            if defer_sparse or i == self._run_last:
+                # flat schedule / end of run: live state IS the snapshot;
+                # the pairs land at the next step's (or run's) landing
+                dense, opt, _, p_ids, p_rows = self._j_emb_bwd(
+                    st.dense, st.dense_opt, st.table, full["dout"],
+                    full["dev"], cand_s, cand_f, apply_sparse=False)
+                self.state = snapshot = GRTrainState(
+                    dense, opt, st.table, p_ids, p_rows, st.step + 1)
+            else:
+                # pipelined steady state: land now — dense_fwd(i+1) is
+                # the next statement and must see the fresh rows; the
+                # pre-landing st.table reference still backs the snapshot
+                dense, opt, table, p_ids, p_rows = self._j_emb_bwd(
+                    st.dense, st.dense_opt, st.table, full["dout"],
+                    full["dev"], cand_s, cand_f, apply_sparse=True)
+                snapshot = GRTrainState(dense, opt, st.table, p_ids,
+                                        p_rows, st.step + 1)
+                self.state = GRTrainState(
+                    dense, opt, table, jnp.full_like(p_ids, -1),
+                    jnp.zeros_like(p_rows), st.step + 1)
+        else:
+            dense, opt, table, p_ids, p_rows = self._j_emb_bwd(
+                st.dense, st.dense_opt, st.table, full["dout"],
+                full["dev"], cand_s, cand_f, apply_sparse=True)
+            self.state = snapshot = GRTrainState(
+                dense, opt, table, jnp.full_like(p_ids, -1),
+                jnp.zeros_like(p_rows), st.step + 1)
+        self._bcache[i] = None            # free the consumed numpy batch
+        if self.step_callback:
+            self.step_callback(i, rec, snapshot)
+        return rec
+
+    def _make_hooks(self) -> PipelineHooks:
+        return PipelineHooks(
+            dataload=self._hk_dataload, a2a=self._hk_a2a,
+            unique=self._hk_unique, emb_fwd=self._hk_emb_fwd,
+            dense_fwd=self._hk_dense_fwd, dense_bwd=self._hk_dense_bwd,
+            emb_bwd=self._hk_emb_bwd)
+
+    # -- run ---------------------------------------------------------------
+    def run(self, steps: int) -> List[Dict[str, Any]]:
+        """Train ``steps`` batches; returns per-step records."""
+        if steps <= 0:
+            return []
+        self._prepare_run(steps)
+        if self.schedule == "algorithm1":
+            pipe = SixStagePipeline(self._make_hooks(), workers=self.workers)
+            results = pipe.run(steps)
+            self.events = list(pipe.events)
+            return results
+        return self._run_flat(steps)
+
+    def _run_flat(self, steps: int) -> List[Dict[str, Any]]:
+        """Serial per-step execution of the same stages (no pipelining) —
+        the pre-engine training loop, with the same τ=1 dataflow: batch
+        i−1's pairs land *after* batch i's prefetched input gather."""
+        results = []
+
+        def stage(name, i, fn, *a, **kw):
+            t0 = time.perf_counter()
+            out = fn(i, *a, **kw)
+            self.events.append(StageEvent(name, i, t0, time.perf_counter()))
+            return out
+
+        self._leftover = False            # flat lands pending every step
+        for i in range(steps):
+            nb = stage("dataload", i, self._hk_dataload)
+            art = stage("a2a", i, self._hk_a2a, nb)
+            art = stage("unique", i, self._hk_unique, art)
+            art = stage("emb_fwd", i, self._hk_emb_fwd, art)
+            if self.semi_async:
+                # the sparse half of emb_bwd(i−1): the delayed landing
+                t0 = time.perf_counter()
+                self._land_pending()
+                if i > 0:
+                    self.events.append(
+                        StageEvent("emb_bwd", i - 1, t0,
+                                   time.perf_counter()))
+            small = stage("dense_fwd", i, self._hk_dense_fwd, art)
+            rec = stage("dense_bwd", i, self._hk_dense_bwd, small)
+            stage("emb_bwd", i, self._hk_emb_bwd, rec, defer_sparse=True)
+            results.append(rec)
+        return results
+
+    # -- reporting ---------------------------------------------------------
+    def timeline_report(self) -> Dict[str, float]:
+        """Table-6 breakdown of the last run's real stage events."""
+        return _timeline_report(self.events)

@@ -6,13 +6,23 @@
   AdamW. Grad-accumulation dtype and optimizer-moment dtype come from the
   partition plan (398B uses bf16 for both).
 
-* :func:`make_gr_train_step` — the paper's training step: sparse lookup
-  (HSP sparse-exchange or dense baseline), jagged dense model, sampled-
-  softmax recall loss (§4.3 modes; the default is the fused ID-driven
-  megakernel path, whose custom VJP delivers the table gradient through
-  the sorted run-sum scatter), AdamW on dense params, sparse row-wise
-  Eq.-1 AdaGrad on the ShadowedTable (fp32 master + §4.3.2 fp16 shadow),
-  optionally τ=1 semi-async sparse updates (§4.2.2).
+* :func:`make_gr_stages` — the paper's training step decomposed into the
+  Algorithm-1 (§4.2.3) device-stage functions: ``emb_fwd`` (input-side
+  table gather, the τ=1-stale prefetched read), ``dense_fwd_bwd`` (jagged
+  dense model + fused sampled-softmax recall loss + grads w.r.t. dense
+  params / fresh master / prefetched rows), ``emb_bwd``
+  (candidate-dedup'd sparse (id, row) pairs + AdamW + row-sparse Eq.-1
+  AdaGrad on the ShadowedTable) and ``sparse_apply`` (the deferred τ=1
+  landing). ``repro.training.engine.GREngine`` dispatches these as real
+  pipeline stages.
+
+* :func:`make_gr_train_step` — the flat fused step: the same stage
+  functions composed inside one jit (sparse lookup via HSP
+  sparse-exchange or dense baseline, §4.3 neg-sampling modes — default
+  the fused ID-driven megakernel path whose custom VJP delivers the table
+  gradient through the sorted run-sum scatter), optionally τ=1 semi-async
+  sparse updates (§4.2.2). The engine's pipelined schedule is verified
+  bit-identical against this composition.
 
 Semi-async staleness accounting (§4.2.2, Fig. 8): the sparse gradient of
 batch t is exchanged/applied during batch t+1's dense stream. The only
@@ -30,6 +40,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import semi_async as SA
@@ -139,7 +150,32 @@ def gr_pending_slots(batch: Batch) -> int:
                + batch["neg_ids"].size)
 
 
-def _table_grad_pairs(gt: jax.Array, batch: Batch, vocab: int):
+def host_unique_candidates(batch, vocab: int):
+    """Host-side realization of the pipeline's "unique" stage.
+
+    Numpy mirror of the candidate dedup :func:`_table_grad_pairs`
+    performs in-graph (concat → clip → sort → first-occurrence mask), so
+    the sort runs on a worker thread overlapped with device compute
+    (Algorithm 1 line 9) and the device stages consume the precomputed
+    (sorted, first) arrays bit-identically — integer sorts agree exactly
+    between numpy and XLA. This is the same dedup
+    :func:`repro.core.hsp.unique_accumulate` runs per-shard before the
+    sparse gradient exchange; here it covers the whole candidate list of
+    a batch (input ids + labels + negatives).
+    """
+    cand = np.concatenate([
+        np.asarray(batch["ids"]).reshape(-1),
+        np.asarray(batch["labels"]).reshape(-1),
+        np.asarray(batch["neg_ids"]).reshape(-1)]).astype(np.int32)
+    cand = np.clip(cand, 0, vocab - 1)
+    s = np.sort(cand)
+    first = np.concatenate([np.ones((1,), bool), s[1:] != s[:-1]])
+    return s, first
+
+
+def _table_grad_pairs(gt: jax.Array, batch: Batch, vocab: int,
+                      cand_sorted: Optional[jax.Array] = None,
+                      cand_first: Optional[jax.Array] = None):
     """Dense table grad → deduplicated sparse (id, grad-row) pairs.
 
     Every table read happens at the batch's candidate ids (input ids,
@@ -147,27 +183,167 @@ def _table_grad_pairs(gt: jax.Array, batch: Batch, vocab: int):
     Duplicates are collapsed by a first-occurrence mask over the sorted
     candidate list (−1 sentinels elsewhere), giving unique ids whose
     gathered rows are the already-aggregated per-row gradients.
+
+    ``cand_sorted``/``cand_first`` accept the host "unique" stage's
+    precomputed sort (:func:`host_unique_candidates`) so the pipeline can
+    overlap the candidate dedup with device compute; when absent the sort
+    runs in-graph (the flat fused step).
     """
-    cand = jnp.concatenate([
-        batch["ids"].reshape(-1), batch["labels"].reshape(-1),
-        batch["neg_ids"].reshape(-1)]).astype(jnp.int32)
-    cand = jnp.clip(cand, 0, vocab - 1)
-    s = jnp.sort(cand)
-    first = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
+    if cand_sorted is None:
+        cand = jnp.concatenate([
+            batch["ids"].reshape(-1), batch["labels"].reshape(-1),
+            batch["neg_ids"].reshape(-1)]).astype(jnp.int32)
+        cand = jnp.clip(cand, 0, vocab - 1)
+        s = jnp.sort(cand)
+        first = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
+    else:
+        s, first = cand_sorted, cand_first
     uids = jnp.where(first, s, -1)
     rows = gt[jnp.where(first, s, 0)] * first[:, None]
     return uids, rows.astype(jnp.float32)
 
 
+# -- Algorithm-1 stage functions -------------------------------------------
+#
+# The train step is not a monolith: it is the composition of the three
+# device stages of the paper's six-stage pipeline (§4.2.3), factored here
+# as separately-jittable functions so the execution engine
+# (repro.training.engine.GREngine) can dispatch them as pipeline stages
+# while the flat fused step below composes the *same* functions inside one
+# jit — both paths therefore produce bit-identical losses and states.
+
+class GRDenseOut(NamedTuple):
+    """Artifact flowing dense_fwd/bwd → emb_bwd (one batch)."""
+    loss: jax.Array
+    grads_dense: Params                  # AdamW input
+    grad_table: jax.Array                # (V, D) grad w.r.t. the fresh master
+    grad_x: Optional[jax.Array]          # cotangent w.r.t. prefetched rows
+    grad_stale: Optional[jax.Array]      # (V, D) stale-master grad (inline)
+
+
+class GRStages(NamedTuple):
+    """The staged GR train step (Algorithm 1 device-stage vocabulary).
+
+    emb_fwd(stale_master, batch) -> x | None
+        Input-side table gather. In the pipeline this runs *before* the
+        previous batch's sparse update lands — the τ=1 stale read
+        (§4.2.2). Returns None when the gather is inlined into the dense
+        stage (sync training, or no ``input_gather`` provided).
+    dense_fwd_bwd(dense, table, batch, x, stale_master) -> GRDenseOut
+        Jagged dense model + fused sampled-softmax loss + grads w.r.t.
+        dense params, the fresh master (labels/negatives) and the
+        prefetched input rows.
+    emb_bwd(dense, dense_opt, table, dout, batch, cand_sorted, cand_first,
+            *, apply_sparse) -> (dense', opt', table', p_ids, p_rows)
+        _table_grad_pairs + AdamW + (optionally deferred) row-sparse
+        Eq.-1 AdaGrad. ``apply_sparse=False`` returns the pairs as the
+        τ=1 pending cross-batch artifact instead of applying them.
+    sparse_apply(table, p_ids, p_rows) -> table'
+        The deferred landing of pending pairs (Algorithm 1 line 3).
+    """
+    emb_fwd: Callable
+    dense_fwd_bwd: Callable
+    emb_bwd: Callable
+    sparse_apply: Callable
+
+
+def make_gr_stages(loss_fn: Callable[..., jax.Array], *,
+                   lr_dense: float = 4e-3, lr_sparse: float = 4e-3,
+                   semi_async: bool = True,
+                   input_gather: Optional[Callable] = None) -> GRStages:
+    """Decompose the GR train step into Algorithm-1 stage functions.
+
+    ``input_gather(master, batch) -> x`` is the standalone input-side
+    lookup (``GRBundle.input_gather``). When provided (and
+    ``semi_async``), the emb_fwd stage performs the gather as its own
+    dispatch and emb_bwd recovers the input-side table grad by linearly
+    transposing it — the gather must therefore be built from transposable
+    linear primitives (plain take + cast; not a custom-vjp lookup). When
+    None, the input lookup stays inside the dense stage, differentiated
+    against the stale master via ``input_table=`` (the pre-staging
+    behaviour, and the only mode that supports custom ``lookup_fn``s).
+    """
+    x_mode = semi_async and input_gather is not None
+
+    def emb_fwd(stale_master, batch):
+        if not x_mode:
+            return None
+        return input_gather(stale_master, batch)
+
+    def dense_fwd_bwd(dense, table: ET.ShadowedTable, batch,
+                      x=None, stale_master=None) -> GRDenseOut:
+        shadow = table.shadow
+        if semi_async and x is not None:
+            (loss, _), (gd, gt, gx) = jax.value_and_grad(
+                lambda d, tf, xx: (loss_fn(d, tf, batch, x_emb=xx,
+                                           shadow=shadow), 0.0),
+                argnums=(0, 1, 2), has_aux=True)(dense, table.master, x)
+            return GRDenseOut(loss, gd, gt, gx, None)
+        if semi_async:
+            (loss, _), (gd, g_stale, g_fresh) = jax.value_and_grad(
+                lambda d, ts, tf: (loss_fn(d, tf, batch, input_table=ts,
+                                           shadow=shadow), 0.0),
+                argnums=(0, 1, 2), has_aux=True)(
+                    dense, stale_master, table.master)
+            return GRDenseOut(loss, gd, g_fresh, None, g_stale)
+        (loss, _), (gd, gt) = jax.value_and_grad(
+            lambda d, t: (loss_fn(d, t, batch, input_table=None,
+                                  shadow=shadow), 0.0),
+            argnums=(0, 1), has_aux=True)(dense, table.master)
+        return GRDenseOut(loss, gd, gt, None, None)
+
+    def emb_bwd(dense, dense_opt, table: ET.ShadowedTable,
+                dout: GRDenseOut, batch,
+                cand_sorted=None, cand_first=None, *,
+                apply_sparse: bool = True):
+        vocab = table.master.shape[0]
+        if semi_async:
+            if dout.grad_x is not None:
+                # transpose of the emb_fwd gather: the input-side scatter
+                # the fused step's autodiff emits for input_table
+                tsd = jax.ShapeDtypeStruct(table.master.shape,
+                                           table.master.dtype)
+                g_stale = jax.linear_transpose(
+                    lambda t: input_gather(t, batch), tsd)(dout.grad_x)[0]
+            else:
+                g_stale = dout.grad_stale
+            gt = (g_stale + dout.grad_table).astype(jnp.float32)
+        else:
+            gt = dout.grad_table.astype(jnp.float32)
+        p_ids, p_rows = _table_grad_pairs(gt, batch, vocab,
+                                          cand_sorted, cand_first)
+        new_dense, new_opt = O.adamw_update(
+            dout.grads_dense, dense_opt, dense, lr=lr_dense,
+            weight_decay=0.0)
+        new_table = (O.adagrad_sparse_update(table, p_ids, p_rows,
+                                             lr=lr_sparse)
+                     if apply_sparse else table)
+        return new_dense, new_opt, new_table, p_ids, p_rows
+
+    def sparse_apply(table: ET.ShadowedTable, p_ids, p_rows):
+        return O.adagrad_sparse_update(table, p_ids, p_rows, lr=lr_sparse)
+
+    return GRStages(emb_fwd, dense_fwd_bwd, emb_bwd, sparse_apply)
+
+
 def make_gr_train_step(loss_fn: Callable[..., jax.Array], *,
                        lr_dense: float = 4e-3, lr_sparse: float = 4e-3,
-                       semi_async: bool = True):
+                       semi_async: bool = True,
+                       input_gather: Optional[Callable] = None):
     """loss_fn(dense_params, table, batch, *, input_table=None,
     shadow=None) → scalar (built from GRBundle.loss with the
     lookup/neg-sampling modes already bound; the default "fused" mode
     keeps the whole negative path out of HBM, gathers negatives from the
     half-precision ``shadow``, and its table grad arrives pre-reduced from
     sparse (id, row) pairs).
+
+    The step is the flat composition of the :func:`make_gr_stages` stage
+    functions inside one jit — the oracle the pipelined execution engine
+    (``GREngine(schedule="algorithm1")``) is verified bit-identical
+    against. ``input_gather`` opts the composition into the staged
+    input-gather dataflow (x as an explicit artifact); entrypoints go
+    through :class:`repro.training.engine.GREngine`, which always passes
+    it for the plain-gather path.
 
     semi_async=True is the τ=1 schedule: last step's sparse (id, row)
     pairs land first (their exchange overlapped this step's dense
@@ -176,43 +352,35 @@ def make_gr_train_step(loss_fn: Callable[..., jax.Array], *,
     :func:`repro.training.optim.adagrad_sparse_update` — master, shadow
     and accumulator are rewritten at touched rows only.
     """
+    st = make_gr_stages(loss_fn, lr_dense=lr_dense, lr_sparse=lr_sparse,
+                        semi_async=semi_async, input_gather=input_gather)
 
     def train_step(state: GRTrainState, batch: Batch):
         tbl = state.table
-        vocab = tbl.master.shape[0]
 
         if semi_async:
-            # 1) delayed τ=1 sparse update lands (overlaps the dense
-            #    stream in the real system; zero pairs on step 0)
-            fresh = O.adagrad_sparse_update(
-                tbl, state.pending_ids, state.pending_rows, lr=lr_sparse)
-            # 2) forward/backward: only the prefetched input-side lookup
-            #    reads the stale master; labels/negatives see fresh rows
-            (loss, _), (gd, g_stale, g_fresh) = jax.value_and_grad(
-                lambda d, ts, tf: (loss_fn(d, tf, batch, input_table=ts,
-                                           shadow=fresh.shadow), 0.0),
-                argnums=(0, 1, 2), has_aux=True)(
-                    state.dense, tbl.master, fresh.master)
-            gt = (g_stale + g_fresh).astype(jnp.float32)
-            p_ids, p_rows = _table_grad_pairs(gt, batch, vocab)
-            new_table = fresh
+            # emb_fwd for this batch reads the stale master (the pipeline
+            # prefetched it before the delayed update landed)...
+            stale = tbl.master
+            x = st.emb_fwd(stale, batch)
+            # ...then the τ=1 pending pairs land (line 3 of Algorithm 1;
+            # their exchange overlapped this step's dense stream)
+            fresh = st.sparse_apply(tbl, state.pending_ids,
+                                    state.pending_rows)
+            dout = st.dense_fwd_bwd(state.dense, fresh, batch, x, stale)
+            new_dense, new_opt, new_table, p_ids, p_rows = st.emb_bwd(
+                state.dense, state.dense_opt, fresh, dout, batch,
+                apply_sparse=False)   # pairs become the next step's carry
         else:
-            (loss, _), (gd, gt) = jax.value_and_grad(
-                lambda d, t: (loss_fn(d, t, batch, input_table=None,
-                                      shadow=tbl.shadow), 0.0),
-                argnums=(0, 1), has_aux=True)(state.dense, tbl.master)
-            uids, rows = _table_grad_pairs(gt.astype(jnp.float32), batch,
-                                           vocab)
-            new_table = O.adagrad_sparse_update(tbl, uids, rows,
-                                                lr=lr_sparse)
+            dout = st.dense_fwd_bwd(state.dense, tbl, batch)
+            new_dense, new_opt, new_table, uids, rows = st.emb_bwd(
+                state.dense, state.dense_opt, tbl, dout, batch,
+                apply_sparse=True)
             p_ids = jnp.full_like(uids, -1)
             p_rows = jnp.zeros_like(rows)
 
-        new_dense, new_opt = O.adamw_update(
-            gd, state.dense_opt, state.dense, lr=lr_dense, weight_decay=0.0)
-
         return (GRTrainState(new_dense, new_opt, new_table,
                              p_ids, p_rows, state.step + 1),
-                {"loss": loss})
+                {"loss": dout.loss})
 
     return train_step

@@ -2,6 +2,7 @@
 import time
 
 import numpy as np
+import pytest
 
 from repro.core.pipeline import (PipelineHooks, SixStagePipeline,
                                  timeline_report)
@@ -101,6 +102,91 @@ def _run_events(steps=8):
     p = SixStagePipeline(_hooks(log, {"a2a": 0.004}), workers=3)
     p.run(steps)
     return p.events
+
+
+@pytest.mark.parametrize("steps", [0, 1, 2, 3, 5, 8])
+def test_no_stage_invoked_out_of_range(steps):
+    """Submission-bound regression: the lookahead (dataload i+5, a2a i+4,
+    unique i+4, emb_fwd i+2) must clamp at the horizon — no hook is ever
+    invoked for a batch index that won't be consumed, every stage of every
+    trained batch runs exactly once, and the drain leaves no orphaned
+    futures behind."""
+    ledger = []
+
+    def mk(name):
+        def fn(i, *a):
+            ledger.append((name, i))
+            return (name, i)
+        return fn
+
+    hooks = PipelineHooks(**{s: mk(s) for s in
+                             ("dataload", "a2a", "unique", "emb_fwd",
+                              "dense_fwd", "dense_bwd", "emb_bwd")})
+    p = SixStagePipeline(hooks, workers=3)
+    res = p.run(steps)
+    assert len(res) == steps
+    for name, i in ledger:
+        assert 0 <= i < steps, f"{name} invoked for out-of-range batch {i}"
+    for name in ("dataload", "a2a", "unique", "emb_fwd",
+                 "dense_fwd", "dense_bwd", "emb_bwd"):
+        seen = sorted(i for (s, i) in ledger if s == name)
+        assert seen == list(range(steps)), (name, seen)
+    assert not p._futures, "undrained futures after run()"
+    # artifacts of completed batches were retired (only the final batch's
+    # epilogue leftovers may remain)
+    assert all(i >= steps - 1 for (_, i) in p._artifacts)
+
+
+def _tiny_engine(schedule, steps=5):
+    import jax
+
+    from repro.configs import ARCHS, reduced
+    from repro.data.synthetic import synth_jagged_batch
+    from repro.models.model_zoo import get_bundle
+    from repro.training.engine import GREngine
+
+    cfg = reduced(ARCHS["hstu-tiny"]).replace(num_negatives=4,
+                                              vocab_size=256)
+    b = get_bundle(cfg)
+
+    def batch(i):
+        return synth_jagged_batch(jax.random.PRNGKey(i % 2), 2, 64, 256, 4,
+                                  offsets=[[0, 32, 64], [0, 50, 60]])
+
+    eng = GREngine(b, batch, loss_kwargs=dict(neg_mode="fused",
+                                              neg_segment=32),
+                   semi_async=True, schedule=schedule)
+    eng.run(steps)
+    return eng
+
+
+def test_engine_real_run_timeline_invariants():
+    """Table-6 invariants on a timeline recorded from REAL training work
+    (not the sleep simulator): computing ≤ wall, not-overlapped ≤ comm,
+    and the three ratios partition 1.0 — for both engine schedules; the
+    event trace follows the Algorithm-1 statement order in steady state."""
+    for schedule in ("algorithm1", "flat"):
+        eng = _tiny_engine(schedule)
+        r = eng.timeline_report()
+        assert r["computing_s"] <= r["wall_s"] + 1e-9, (schedule, r)
+        assert (r["comm_not_overlapped_s"]
+                <= r["communication_s"] + 1e-9), (schedule, r)
+        total = (r["computing_ratio"] + r["comm_not_overlapped_ratio"]
+                 + r["free_ratio"])
+        assert abs(total - 1.0) < 1e-9, (schedule, r)
+        # every stage produced events for real work
+        stages_seen = {e.stage for e in eng.events}
+        assert stages_seen == {"dataload", "a2a", "unique", "emb_fwd",
+                               "dense_fwd", "dense_bwd", "emb_bwd"}, \
+            (schedule, stages_seen)
+    # Algorithm-1 ordering on the pipelined run's real events
+    eng = _tiny_engine("algorithm1", steps=6)
+    start = {}
+    for e in eng.events:
+        start.setdefault((e.stage, e.batch), e.start)
+    for i in range(2, 4):
+        assert start[("emb_bwd", i)] <= start[("dense_fwd", i + 1)]
+        assert start[("dense_fwd", i + 1)] <= start[("dense_bwd", i + 1)]
 
 
 def test_stage_ordering_matches_algorithm_1():

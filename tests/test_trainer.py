@@ -8,11 +8,14 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, reduced
+from repro.data.synthetic import synth_jagged_batch
 from repro.models.model_zoo import get_bundle
 from repro.training import checkpoint as CKPT
 from repro.training import optim as O
-from repro.training.trainer import (gr_train_state, lm_train_state,
-                                    make_gr_train_step, make_lm_train_step)
+from repro.training.engine import GREngine, make_gr_step_fn
+from repro.training.trainer import (gr_pending_slots, gr_train_state,
+                                    lm_train_state, make_gr_train_step,
+                                    make_lm_train_step)
 
 
 def test_adamw_matches_reference():
@@ -81,17 +84,8 @@ def _gr_setup(semi_async):
         semi_async=semi_async))
 
     def batch(i):
-        k = jax.random.PRNGKey(i)
-        G, cap = 2, 128
-        return {
-            "ids": jax.random.randint(k, (G, cap), 0, 512),
-            "labels": jax.random.randint(k, (G, cap), 1, 512),
-            "timestamps": jnp.cumsum(jax.random.randint(k, (G, cap), 0, 60),
-                                     1).astype(jnp.int32),
-            "offsets": jnp.asarray([[0, 64, 128], [0, 100, 120]], jnp.int32),
-            "neg_ids": jax.random.randint(k, (G, cap, 8), 0, 512),
-            "rng": jnp.zeros((2,), jnp.uint32),
-        }
+        return synth_jagged_batch(jax.random.PRNGKey(i), 2, 128, 512, 8,
+                                  offsets=[[0, 64, 128], [0, 100, 120]])
     return state, step, batch
 
 
@@ -115,6 +109,103 @@ def test_semi_async_close_to_sync():
         s_async, m_a = step_async(s_async, batch(i % 2))
     gap = abs(float(m_s["loss"]) - float(m_a["loss"]))
     assert gap / float(m_s["loss"]) < 0.05, gap
+
+
+def _engine_setup(semi_async):
+    """Bundle + deterministic data_fn + fresh-state factory for the
+    staged-engine parity tests (fused neg path — the production default)."""
+    cfg = reduced(ARCHS["hstu-tiny"]).replace(num_negatives=8,
+                                              vocab_size=512)
+    b = get_bundle(cfg)
+    key = jax.random.PRNGKey(0)
+
+    def batch(i):
+        return synth_jagged_batch(jax.random.PRNGKey(i % 3), 2, 128, 512, 8,
+                                  offsets=[[0, 64, 128], [0, 100, 120]])
+
+    def mk_state():
+        return gr_train_state(b.init_dense(key), b.init_table(key),
+                              pending_slots=gr_pending_slots(batch(0)))
+
+    lk = dict(neg_mode="fused", neg_segment=32)
+    return b, batch, mk_state, lk
+
+
+@pytest.mark.parametrize("semi_async", [False, True])
+def test_engine_schedules_match_fused_step(semi_async):
+    """The staged engine — pipelined (Algorithm 1) and serial (flat) —
+    must produce bit-identical per-step losses AND a bit-identical final
+    GRTrainState (table master, shadow, AdaGrad accum, pending τ=1 pairs)
+    to the fused single-jit train step, for sync and τ=1 training."""
+    b, batch, mk_state, lk = _engine_setup(semi_async)
+    N = 5
+
+    step = make_gr_step_fn(b, loss_kwargs=lk, semi_async=semi_async)
+    st, losses = mk_state(), []
+    for i in range(N):
+        st, m = step(st, batch(i))
+        losses.append(float(m["loss"]))
+    assert int(st.step) == N
+
+    for sched in ("algorithm1", "flat"):
+        eng = GREngine(b, batch, state=mk_state(), loss_kwargs=lk,
+                       semi_async=semi_async, schedule=sched)
+        recs = eng.run(N)
+        assert [r["loss"] for r in recs] == losses, sched
+        for a, c in zip(jax.tree.leaves(st), jax.tree.leaves(eng.state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(c),
+                                          err_msg=sched)
+
+
+def test_engine_resume_carries_pending_pairs():
+    """Splitting one τ=1 run into two engine runs must not change the
+    trajectory: the pending pairs of the first run's last batch are an
+    explicit carry landed mid-prologue of the second run."""
+    b, batch, mk_state, lk = _engine_setup(True)
+    step = make_gr_step_fn(b, loss_kwargs=lk, semi_async=True)
+    st, losses = mk_state(), []
+    for i in range(6):
+        st, m = step(st, batch(i))
+        losses.append(float(m["loss"]))
+
+    eng = GREngine(b, batch, state=mk_state(), loss_kwargs=lk,
+                   semi_async=True, schedule="algorithm1")
+    r1 = eng.run(3)
+    assert bool((np.asarray(eng.state.pending_ids) >= 0).any())
+    eng2 = GREngine(b, lambda i: batch(i + 3), state=eng.state,
+                    loss_kwargs=lk, semi_async=True, schedule="algorithm1")
+    r2 = eng2.run(3)
+    assert [r["loss"] for r in r1 + r2] == losses
+    for a, c in zip(jax.tree.leaves(st), jax.tree.leaves(eng2.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_engine_midrun_snapshot_is_resume_equivalent():
+    """A state snapshot taken from step_callback mid-run under the
+    pipelined schedule must be the carry-convention state: resuming the
+    fused step from it reproduces the uninterrupted trajectory exactly
+    (the τ=1 pairs ride in pending, not pre-applied to the table)."""
+    b, batch, mk_state, lk = _engine_setup(True)
+    step = make_gr_step_fn(b, loss_kwargs=lk, semi_async=True)
+    st, losses = mk_state(), []
+    for i in range(5):
+        st, m = step(st, batch(i))
+        losses.append(float(m["loss"]))
+
+    snaps = {}
+    eng = GREngine(b, batch, state=mk_state(), loss_kwargs=lk,
+                   semi_async=True, schedule="algorithm1",
+                   step_callback=lambda i, rec, state:
+                       snaps.__setitem__(i, state))
+    eng.run(5)
+    # resume the fused step from the snapshot taken at step 2
+    st2, resumed = snaps[1], []
+    for i in range(2, 5):
+        st2, m = step(st2, batch(i))
+        resumed.append(float(m["loss"]))
+    assert resumed == losses[2:]
+    for a, c in zip(jax.tree.leaves(st), jax.tree.leaves(st2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
 
 
 def test_checkpoint_atomic_latest_and_async():
