@@ -1,0 +1,130 @@
+"""Fault-tolerance overhead + recovery cost (DESIGN.md §7).
+
+    PYTHONPATH=src python -m benchmarks.bench_recovery
+
+Three measurements on the staged GREngine with a tiny GR workload:
+
+1. checkpoint overhead — steady-state µs/step of a plain run vs a
+   resilient run with async saves vs sync saves (the async saver's
+   snapshot-then-background-write is the paper's "training continues"
+   claim; the delta is the per-step cost of crash consistency);
+2. recovery wall time — injected stage crash → drain + restore + resume,
+   measured end to end per fault site;
+3. steps-lost vs ckpt_every — the durability/overhead trade: how many
+   steps a crash replays for each checkpoint cadence.
+
+Writes BENCH_recovery.json (recovery_wall_s, step overhead, steps_lost
+sweep) next to the CSV rows.
+"""
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from benchmarks.common import emit, write_bench_json
+from repro.configs import ARCHS, reduced
+from repro.data.synthetic import synth_jagged_batch
+from repro.models.model_zoo import get_bundle
+from repro.training.engine import GREngine
+from repro.training.resilience import FaultInjector, FaultPolicy, FaultSpec
+from repro.training.trainer import gr_pending_slots, gr_train_state
+
+LK = dict(neg_mode="fused", neg_segment=64)
+STEPS = 24
+
+
+def _parts():
+    cfg = reduced(ARCHS["hstu-tiny"]).replace(num_negatives=8,
+                                              vocab_size=1024)
+    b = get_bundle(cfg)
+    key = jax.random.PRNGKey(0)
+
+    def batch(i):
+        return synth_jagged_batch(jax.random.PRNGKey(i % 4), 4, 128, 1024,
+                                  8)
+
+    def mk_state():
+        return gr_train_state(b.init_dense(key), b.init_table(key),
+                              pending_slots=gr_pending_slots(batch(0)))
+    return b, batch, mk_state
+
+
+def _engine(b, batch, mk_state):
+    return GREngine(b, batch, state=mk_state(), loss_kwargs=LK,
+                    semi_async=True, schedule="algorithm1")
+
+
+def _wall(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def _warm_engine(b, batch, mk_state):
+    """Fresh engine with hot jit caches and pristine state (each GREngine
+    jits its own stage closures, so the warmup must run on the same
+    instance that gets timed)."""
+    eng = _engine(b, batch, mk_state)
+    eng.run(3)
+    eng.state = mk_state()
+    return eng
+
+
+def main():
+    b, batch, mk_state = _parts()
+
+    # -- 1. per-step overhead of crash-consistent checkpointing -----------
+    eng = _warm_engine(b, batch, mk_state)
+    plain = _wall(lambda: eng.run(STEPS)) / STEPS
+    results = {"steps": STEPS, "us_per_step": {}}
+    emit("recovery/step_plain", plain * 1e6)
+    results["us_per_step"]["plain"] = plain * 1e6
+    for mode, async_save in (("async_save", True), ("sync_save", False)):
+        with tempfile.TemporaryDirectory() as d:
+            eng = _warm_engine(b, batch, mk_state)
+            per = _wall(lambda: eng.run_resilient(
+                STEPS, ckpt_dir=d, ckpt_every=4, async_save=async_save,
+                keep_last_n=2)) / STEPS
+        emit(f"recovery/step_{mode}", per * 1e6,
+             f"overhead={100 * (per - plain) / plain:.1f}%")
+        results["us_per_step"][mode] = per * 1e6
+
+    # -- 2. recovery wall time per fault site ------------------------------
+    sites = ["dataload", "unique", "dense_fwd", "emb_bwd"]
+    results["recovery_wall_s"] = {}
+    for stage in sites:
+        with tempfile.TemporaryDirectory() as d:
+            eng = _warm_engine(b, batch, mk_state)
+            eng.run_resilient(
+                STEPS, ckpt_dir=d, ckpt_every=4,
+                policy=FaultPolicy(retries={}),
+                injector=FaultInjector([FaultSpec(stage, 13, "exception")]))
+            ev = eng.recoveries[0]
+        emit(f"recovery/wall_{stage}", ev.wall_s * 1e6,
+             f"steps_lost={ev.steps_lost}")
+        results["recovery_wall_s"][stage] = ev.wall_s
+
+    # -- 3. steps lost vs checkpoint cadence -------------------------------
+    results["steps_lost_vs_ckpt_every"] = {}
+    for every in (2, 4, 8):
+        with tempfile.TemporaryDirectory() as d:
+            eng = _warm_engine(b, batch, mk_state)
+            eng.run_resilient(
+                STEPS, ckpt_dir=d, ckpt_every=every,
+                policy=FaultPolicy(retries={}),
+                injector=FaultInjector(
+                    [FaultSpec("dense_bwd", 15, "exception")]))
+            lost = eng.recoveries[0].steps_lost
+        emit(f"recovery/steps_lost_every{every}", float(lost),
+             f"ckpt_every={every}")
+        results["steps_lost_vs_ckpt_every"][str(every)] = lost
+
+    write_bench_json("recovery", results)
+
+
+if __name__ == "__main__":
+    main()

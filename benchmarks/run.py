@@ -23,6 +23,7 @@ _ORDERED = [
     "benchmarks.bench_table7_offload",
     "benchmarks.bench_fig12_quant",
     "benchmarks.bench_table8_logit_sharing",
+    "benchmarks.bench_recovery",
 ]
 
 

@@ -1,11 +1,18 @@
-"""Scenario: fault-tolerant training — checkpoint/restart + elastic shrink.
+"""Scenario: fault-tolerant training — per-stage faults, torn checkpoints,
+and an elastic node drop, all recovered through the staged GREngine.
 
     PYTHONPATH=src python examples/elastic_recovery.py
 
-Simulates a node failure at step 12 of a 24-step GR run. The ElasticRunner
-restores the latest async checkpoint, rebuilds the mesh from the surviving
-devices (model-parallel degree preserved, data-parallel width shrunk), and
-finishes the run — the DESIGN.md §7 recovery cycle.
+Three escalating failure drills on one 24-step GR run:
+
+1. Transient host faults (dataload, unique) absorbed in place by the
+   FaultPolicy retry budget — no recovery cycle.
+2. A mid-run stage crash + a torn checkpoint write: the engine drains the
+   pipeline, falls back past the wreckage to the newest *intact*
+   checkpoint, and replays — bit-identical to an uninterrupted run.
+3. A simulated 2-device node failure at step 12: the ElasticRunner
+   rebuilds the mesh from survivors, restores resharded, and finishes
+   through the pipelined Algorithm-1 schedule.
 """
 import os
 import sys
@@ -14,57 +21,104 @@ import tempfile
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
+import numpy as np
 
 from repro.configs import ARCHS, reduced
 from repro.data.synthetic import synth_jagged_batch
+from repro.training import checkpoint as CKPT
 from repro.models.model_zoo import get_bundle
 from repro.training.elastic import ElasticRunner
-from repro.training.engine import make_gr_step_fn
-from repro.training.trainer import gr_train_state
+from repro.training.engine import GREngine, make_gr_step_fn
+from repro.training.resilience import FaultInjector, FaultPolicy, FaultSpec
+from repro.training.trainer import gr_pending_slots, gr_train_state
+
+LK = dict(neg_mode="fused", neg_segment=32)
+N = 24
 
 
-def main():
+def make_parts():
     cfg = reduced(ARCHS["hstu-tiny"]).replace(num_negatives=8,
                                               vocab_size=512)
     bundle = get_bundle(cfg)
     key = jax.random.PRNGKey(0)
 
-    def build_state(mesh):
-        return gr_train_state(bundle.init_dense(key),
-                              bundle.init_table(key))._asdict()
-
-    def build_step(mesh):
-        from repro.training.trainer import GRTrainState
-        # the engine's staged step (flat single-jit composition) — the
-        # same math GREngine pipelines, here wrapped for the dict-state
-        # checkpoint round-trip the elastic runner performs
-        raw = make_gr_step_fn(
-            bundle, loss_kwargs=dict(neg_mode="fused", neg_segment=32),
-            jit=False)
-
-        @jax.jit
-        def step(state_dict, batch):
-            st, m = raw(GRTrainState(**state_dict), batch)
-            return st._asdict(), m
-        return step
-
-    def data_fn(t, world):
+    def data_fn(t, world=1):
         return synth_jagged_batch(jax.random.PRNGKey(t), 2, 128, 512, 8,
                                   offsets=[[0, 64, 128], [0, 100, 120]])
 
-    with tempfile.TemporaryDirectory() as ckpt_dir:
-        runner = ElasticRunner(build_step=build_step,
-                               build_state=build_state, data_fn=data_fn,
-                               ckpt_dir=ckpt_dir, model_parallel=1,
-                               ckpt_every=5)
-        print("training 24 steps; injecting a 2-device failure at step 12")
-        final = runner.run(24, devices=list(jax.devices()) * 4,
+    def mk_state():
+        return gr_train_state(bundle.init_dense(key),
+                              bundle.init_table(key),
+                              pending_slots=gr_pending_slots(data_fn(0)))
+    return bundle, data_fn, mk_state
+
+
+def oracle(bundle, data_fn, mk_state):
+    step = make_gr_step_fn(bundle, loss_kwargs=LK, semi_async=True)
+    st, losses = mk_state(), []
+    for i in range(N):
+        st, m = step(st, data_fn(i))
+        losses.append(float(m["loss"]))
+    return st, losses
+
+
+def main():
+    bundle, data_fn, mk_state = make_parts()
+    print(f"oracle: uninterrupted fused-step run, {N} steps")
+    st_ref, losses_ref = oracle(bundle, data_fn, mk_state)
+
+    # -- drill 1+2: stage faults + torn save through run_resilient --------
+    print("\ndrill 1+2: injected stage faults + torn checkpoint write")
+    faults = [
+        FaultSpec("dataload", 3, "exception"),   # absorbed by retry
+        FaultSpec("unique", 5, "exception"),     # absorbed by retry
+        FaultSpec("dense_bwd", 9, "exception"),  # escalates → recovery
+        FaultSpec("save", 16, "torn_save", tear="partial_dir"),
+    ]
+    with tempfile.TemporaryDirectory() as d:
+        eng = GREngine(bundle, data_fn, state=mk_state(), loss_kwargs=LK,
+                       semi_async=True, schedule="algorithm1")
+        recs = eng.run_resilient(
+            N, ckpt_dir=d, ckpt_every=4,
+            policy=FaultPolicy(retries={"dataload": 2, "unique": 2}),
+            injector=FaultInjector(faults))
+        retried = [e for e in eng.fault_events if e[0] == "retry"]
+        print(f"  retries absorbed in place: {retried}")
+        for ev in eng.recoveries:
+            print(f"  recovery: failed near step {ev.failed_step}, "
+                  f"restored step {ev.restored_step} "
+                  f"({ev.steps_lost} steps replayed, {ev.wall_s:.3f}s)")
+        ok = [r["loss"] for r in recs] == losses_ref and all(
+            np.array_equal(np.asarray(a), np.asarray(c))
+            for a, c in zip(jax.tree.leaves(st_ref),
+                            jax.tree.leaves(eng.state)))
+        print(f"  bit-identical to uninterrupted run: {ok}")
+        assert ok
+
+    # -- drill 3: elastic node drop through the ElasticRunner -------------
+    print("\ndrill 3: 2-device node failure at step 12, elastic shrink")
+    with tempfile.TemporaryDirectory() as d:
+        def build_engine(mesh, fetch):
+            return GREngine(bundle, fetch, state=mk_state(), loss_kwargs=LK,
+                            semi_async=True, schedule="algorithm1")
+
+        runner = ElasticRunner(build_engine=build_engine, data_fn=data_fn,
+                               ckpt_dir=d, model_parallel=1, ckpt_every=5,
+                               keep_last_n=3)
+        final = runner.run(N, devices=list(jax.devices()) * 4,
                            fail_at={12: 2})
-        print(f"failures handled at steps: {runner.failures}")
-        print(f"final step counter: {int(final['step'])} "
-              f"(restored from step 10, replayed 10→24)")
-        print("recovery cycle: rebuild mesh → restore ckpt → recompute "
-              "data partition — done.")
+        print(f"  typed events: {runner.events}")
+        print(f"  node failures at steps: {runner.failures}")
+        print(f"  checkpoints retained: {CKPT.intact_steps(d)} "
+              f"(keep_last_n=3)")
+        ok = [r["loss"] for r in runner.records] == losses_ref and all(
+            np.array_equal(np.asarray(a), np.asarray(c))
+            for a, c in zip(jax.tree.leaves(st_ref),
+                            jax.tree.leaves(final)))
+        print(f"  bit-identical to uninterrupted run: {ok}")
+        assert ok
+    print("\nrecovery cycle: drain pipeline → restore newest intact "
+          "carry-convention checkpoint → rebuild mesh → replay — done.")
 
 
 if __name__ == "__main__":

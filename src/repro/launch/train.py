@@ -53,8 +53,25 @@ def main():
     ap.add_argument("--no-semi-async", action="store_true")
     ap.add_argument("--use-kernel", action="store_true",
                     help="Pallas jagged attention (interpret on CPU)")
-    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="enables the supervised resilient loop: "
+                         "crash-consistent async checkpoints, per-stage "
+                         "retry, non-finite guard, recovery on failure")
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--keep-last-n", type=int, default=0,
+                    help="retain only the newest N checkpoints (0 = all)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest intact checkpoint in "
+                         "--ckpt-dir and continue to --steps")
+    ap.add_argument("--stage-retries", type=int, default=2,
+                    help="retry budget for the host stages "
+                         "(dataload/a2a/unique)")
+    ap.add_argument("--max-skips", type=int, default=0,
+                    help="non-finite-loss batches to skip before "
+                         "escalating to recovery")
+    ap.add_argument("--stage-timeout", type=float, default=0.0,
+                    help="per-stage straggler watchdog in seconds "
+                         "(0 = off; stragglers are recorded, not failed)")
     ap.add_argument("--lr", type=float, default=4e-3)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
@@ -102,7 +119,6 @@ def main():
         # capped at max_seq_len, so live pairs scale with rows, not cap².
         attn_fn = make_attn_fn(block=128, max_row_len=args.max_seq_len)
 
-    ckpt = CKPT.AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
     t0 = time.time()
     tally = {"tokens": 0}
 
@@ -113,8 +129,6 @@ def main():
             print(f"step {i+1:5d}  loss {rec['loss']:.4f}  "
                   f"{tally['tokens']/dt:,.0f} tok/s  "
                   f"{(i+1)/dt:.2f} steps/s", flush=True)
-        if ckpt and (i + 1) % args.ckpt_every == 0:
-            ckpt.save_async(i + 1, state._asdict())
 
     engine = GREngine(
         bundle, loader,
@@ -123,9 +137,50 @@ def main():
         lr_dense=args.lr, lr_sparse=args.lr,
         semi_async=not args.no_semi_async, schedule=args.schedule,
         seed=args.seed, step_callback=on_step)
-    results = engine.run(args.steps)
-    if ckpt:
-        ckpt.wait()
+    if args.ckpt_dir:
+        # supervised loop: crash-consistent checkpoints + recovery
+        # (training/resilience.py); a failed stage drains the pipeline,
+        # restores the newest intact checkpoint and replays
+        from repro.training.resilience import FaultPolicy
+        host_r = args.stage_retries
+        policy = FaultPolicy(
+            retries={"dataload": host_r, "a2a": host_r, "unique": host_r},
+            stage_timeout_s=({s: args.stage_timeout for s in
+                              ("dataload", "a2a", "unique", "dense_bwd")}
+                             if args.stage_timeout else {}),
+            max_skips=args.max_skips,
+            nonfinite_action="skip" if args.max_skips else "recover")
+        if args.resume:
+            used = CKPT.latest_step(args.ckpt_dir)
+            if used is not None:
+                # template built exactly as the engine would on step 0 (a
+                # twin loader peeks the first batch without advancing the
+                # training loader's RNG)
+                from repro.training.trainer import (gr_pending_slots,
+                                                    gr_train_state)
+                peek = GRLoader(train_seqs, num_devices=ndev,
+                                users_per_device=args.users_per_device,
+                                max_seq_len=args.max_seq_len,
+                                num_negatives=args.num_negatives,
+                                num_items=n_items, strategy=args.strategy,
+                                seed=args.seed)
+                first = next(iter(peek.batches(1)))
+                template = gr_train_state(
+                    bundle.init_dense(key), bundle.init_table(key),
+                    pending_slots=gr_pending_slots(first))
+                engine.state, used = CKPT.restore_with_step(
+                    args.ckpt_dir, template)
+                print(f"[resume] restored intact checkpoint step {used}")
+        results = engine.run_resilient(
+            args.steps, ckpt_dir=args.ckpt_dir,
+            ckpt_every=args.ckpt_every, policy=policy,
+            keep_last_n=args.keep_last_n or None)
+        for ev in engine.recoveries:
+            print(f"[recovery] failed near step {ev.failed_step}, "
+                  f"restored step {ev.restored_step} "
+                  f"({ev.steps_lost} steps replayed)")
+    else:
+        results = engine.run(args.steps)
     r = engine.timeline_report()
     print(f"[timeline] computing {100*r.get('computing_ratio', 0):.1f}%  "
           f"comm-not-overlapped "

@@ -1,2 +1,5 @@
 from repro.training.optim import (AdamWState, adamw_init, adamw_update,
                                   AdaGradState, adagrad_init, adagrad_update)
+from repro.training.resilience import (FaultInjector, FaultPolicy, FaultSpec,
+                                       InjectedFault, NonFiniteLossError,
+                                       RecoveryEvent, StageTimeoutError)

@@ -1,28 +1,38 @@
-"""Fault-tolerant checkpointing (DESIGN.md §7).
+"""Crash-consistent checkpointing (DESIGN.md §7).
 
 Layout:  <dir>/step_<n>/
-             manifest.msgpack   — treedef, per-leaf shape/dtype, step, meta
+             manifest.msgpack   — treedef, per-leaf shape/dtype/CRC32, step,
+                                  meta
              arr_<i>.npy        — one file per leaf (host-local shards in a
                                   multi-process deployment; full arrays here)
          <dir>/LATEST           — atomic pointer (write-to-tmp + rename)
 
 Properties:
-  * atomic — a step directory is fully written + fsync'd before LATEST
-    flips, so a crash mid-save never corrupts the restore point;
+  * atomic + durable — every leaf file, the manifest and the step
+    directory are fsync'd before the directory rename, and the parent
+    directory is fsync'd after it, so a crash mid-save never corrupts the
+    restore point and a completed save survives power loss;
+  * verified — the manifest records a CRC32 per leaf; ``restore`` checks
+    every leaf against it and ``latest_step``/``restore`` fall back to the
+    newest *intact* ``step_*`` directory when LATEST is torn, dangling, or
+    points at a corrupt save;
   * async  — ``save_async`` snapshots to host memory (jax.device_get)
     synchronously, then writes on a background thread (training continues);
+  * bounded — ``keep_last_n`` garbage-collects old step directories after
+    each successful save (never the one just written);
   * restore-with-reshard — ``restore`` takes target shardings; arrays are
     device_put against the *new* mesh, which is how an elastic restart
     onto a different device count works (training/elastic.py).
 """
 from __future__ import annotations
 
-import json
 import os
+import re
 import shutil
 import tempfile
 import threading
-from typing import Any, Dict, Optional
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +40,13 @@ import msgpack
 import numpy as np
 
 from repro.embedding.tables import ShadowedTable, rebuild_shadow, strip_shadow
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A step directory failed integrity verification (missing file,
+    truncated leaf, CRC mismatch, unreadable manifest)."""
 
 
 def _leaves_with_paths(tree: Any):
@@ -66,13 +83,38 @@ def _savable(a: np.ndarray) -> np.ndarray:
     return a
 
 
+# -- durability helpers ------------------------------------------------------
+
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory by path (directories need an O_RDONLY fd —
+    the write-then-rename protocol is only durable if the data, the dir
+    entry, and the parent dir entry all hit disk)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+# -- save --------------------------------------------------------------------
+
 def save(ckpt_dir: str, step: int, tree: Any,
-         meta: Optional[Dict] = None) -> str:
-    """Synchronous atomic save. Returns the step directory.
+         meta: Optional[Dict] = None,
+         keep_last_n: Optional[int] = None) -> str:
+    """Synchronous atomic + durable save. Returns the step directory.
+
+    Every ``arr_*.npy`` and the manifest are fsync'd, then the tmp
+    directory itself, before the ``os.rename`` that publishes the step;
+    the parent directory is fsync'd after the rename (and again after the
+    LATEST flip), so the docstring's atomicity claim holds across power
+    loss, not just process crash. The manifest records a CRC32 per leaf
+    for verified restore.
 
     ShadowedTable nodes are saved with a 0-row shadow placeholder —
     checkpoints never double-store what ``restore`` rebuilds from the
-    master."""
+    master. ``keep_last_n`` (≥1) garbage-collects older ``step_*``
+    directories after the new step is durably published.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     tree = _strip_shadows(tree)
     flat, treedef = _leaves_with_paths(tree)
@@ -80,22 +122,33 @@ def save(ckpt_dir: str, step: int, tree: Any,
 
     tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=f".tmp_step_{step}_")
     try:
+        crcs = []
+        for i, a in enumerate(host):
+            sa = np.ascontiguousarray(_savable(a))
+            crcs.append(zlib.crc32(sa.tobytes()))
+            path = os.path.join(tmp, f"arr_{i}.npy")
+            np.save(path, sa)
+            _fsync_path(path)
         manifest = {
             "step": int(step),
             "treedef": str(treedef),
             "num_leaves": len(host),
             "shapes": [list(a.shape) for a in host],
             "dtypes": [a.dtype.name for a in host],
+            "crc32s": crcs,
             "meta": meta or {},
         }
-        for i, a in enumerate(host):
-            np.save(os.path.join(tmp, f"arr_{i}.npy"), _savable(a))
-        with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        mpath = os.path.join(tmp, "manifest.msgpack")
+        with open(mpath, "wb") as f:
             f.write(msgpack.packb(manifest))
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_path(tmp)                      # directory entries durable
         final = os.path.join(ckpt_dir, f"step_{step}")
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
+        _fsync_path(ckpt_dir)                 # the rename itself durable
     except Exception:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
@@ -106,14 +159,34 @@ def save(ckpt_dir: str, step: int, tree: Any,
         f.flush()
         os.fsync(f.fileno())
     os.replace(ptr_tmp, os.path.join(ckpt_dir, "LATEST"))
+    _fsync_path(ckpt_dir)
+    if keep_last_n is not None:
+        gc_steps(ckpt_dir, keep_last_n)
     return final
+
+
+def gc_steps(ckpt_dir: str, keep_last_n: int) -> List[int]:
+    """Retention policy: delete all but the newest ``keep_last_n`` step
+    directories (by step number). Returns the deleted steps. Stale
+    ``.tmp_step_*`` leftovers from crashed saves are always removed."""
+    assert keep_last_n >= 1, keep_last_n
+    for name in os.listdir(ckpt_dir):
+        if name.startswith(".tmp_step_"):
+            shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+    steps = sorted(_step_dirs(ckpt_dir))
+    victims = steps[:-keep_last_n] if len(steps) > keep_last_n else []
+    for s in victims:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"),
+                      ignore_errors=True)
+    return victims
 
 
 class AsyncCheckpointer:
     """Snapshot-then-write-in-background saver; one save in flight."""
 
-    def __init__(self, ckpt_dir: str):
+    def __init__(self, ckpt_dir: str, keep_last_n: Optional[int] = None):
         self.ckpt_dir = ckpt_dir
+        self.keep_last_n = keep_last_n
         self._thread: Optional[threading.Thread] = None
         self.last_error: Optional[BaseException] = None
 
@@ -128,7 +201,8 @@ class AsyncCheckpointer:
 
         def work():
             try:
-                save(self.ckpt_dir, step, host_tree, meta)
+                save(self.ckpt_dir, step, host_tree, meta,
+                     keep_last_n=self.keep_last_n)
             except BaseException as e:      # surfaced on next wait()
                 self.last_error = e
 
@@ -144,34 +218,163 @@ class AsyncCheckpointer:
             raise err
 
 
+# -- integrity / discovery ---------------------------------------------------
+
+def _step_dirs(ckpt_dir: str) -> List[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(name)
+        if m and os.path.isdir(os.path.join(ckpt_dir, name)):
+            out.append(int(m.group(1)))
+    return out
+
+
+def read_manifest(step_dir: str) -> Dict:
+    """Load and structurally validate a step directory's manifest; raises
+    :class:`CheckpointCorrupt` on any problem (missing, truncated,
+    undecodable, or missing required keys)."""
+    path = os.path.join(step_dir, "manifest.msgpack")
+    try:
+        with open(path, "rb") as f:
+            manifest = msgpack.unpackb(f.read())
+    except Exception as e:
+        raise CheckpointCorrupt(f"unreadable manifest in {step_dir}: {e}")
+    if not isinstance(manifest, dict) or "num_leaves" not in manifest:
+        raise CheckpointCorrupt(f"malformed manifest in {step_dir}")
+    return manifest
+
+
+def intact_steps(ckpt_dir: str) -> List[int]:
+    """Step numbers whose directory has a readable manifest, newest first.
+    (Manifest-level check only; ``restore`` additionally CRC-verifies every
+    leaf and falls back on mismatch.)"""
+    out = []
+    for s in sorted(_step_dirs(ckpt_dir), reverse=True):
+        try:
+            read_manifest(os.path.join(ckpt_dir, f"step_{s}"))
+            out.append(s)
+        except CheckpointCorrupt:
+            continue
+    return out
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest restorable step. The LATEST pointer is a hint, not the
+    truth: when it is missing, torn (garbage contents), or dangling
+    (points at a deleted/unfinished directory), fall back to scanning the
+    ``step_*`` directories for the newest one with an intact manifest —
+    a torn pointer must never silently restart training from step 0."""
     ptr = os.path.join(ckpt_dir, "LATEST")
-    if not os.path.exists(ptr):
-        return None
-    with open(ptr) as f:
-        name = f.read().strip()
-    if not os.path.isdir(os.path.join(ckpt_dir, name)):
-        return None
-    return int(name.split("_")[-1])
+    if os.path.exists(ptr):
+        try:
+            with open(ptr) as f:
+                name = f.read().strip()
+        except OSError:
+            name = ""
+        m = _STEP_RE.match(name)
+        if m:
+            d = os.path.join(ckpt_dir, name)
+            if os.path.isdir(d):
+                try:
+                    read_manifest(d)
+                    return int(m.group(1))
+                except CheckpointCorrupt:
+                    pass
+    good = intact_steps(ckpt_dir)
+    return good[0] if good else None
+
+
+def _load_step_arrays(ckpt_dir: str, step: int, num_leaves: int,
+                      verify: bool = True) -> Tuple[List[np.ndarray], Dict]:
+    """Load + CRC-verify one step directory; CheckpointCorrupt on any
+    missing/truncated/mismatching leaf."""
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    manifest = read_manifest(d)
+    if manifest["num_leaves"] != num_leaves:
+        raise CheckpointCorrupt(
+            f"leaf count mismatch: ckpt {manifest['num_leaves']} vs "
+            f"{num_leaves}")
+    crcs = manifest.get("crc32s")           # absent in pre-hardening ckpts
+    arrs = []
+    for i in range(num_leaves):
+        path = os.path.join(d, f"arr_{i}.npy")
+        try:
+            a = np.load(path)
+        except Exception as e:
+            raise CheckpointCorrupt(f"unreadable leaf {path}: {e}")
+        if verify and crcs is not None:
+            got = zlib.crc32(np.ascontiguousarray(a).tobytes())
+            if got != crcs[i]:
+                raise CheckpointCorrupt(
+                    f"CRC mismatch on {path}: {got} != {crcs[i]}")
+        shapes = manifest.get("shapes")
+        if shapes is not None:
+            # ascontiguousarray promoted 0-d scalars to (1,) at save time;
+            # the manifest holds the true shape
+            try:
+                a = a.reshape(shapes[i])
+            except ValueError as e:
+                raise CheckpointCorrupt(
+                    f"shape mismatch on {path}: {a.shape} vs {shapes[i]}: "
+                    f"{e}")
+        arrs.append(a)
+    return arrs, manifest
 
 
 def restore(ckpt_dir: str, template: Any, step: Optional[int] = None,
-            shardings: Optional[Any] = None) -> Any:
-    """Restore into ``template``'s structure. ``shardings`` (same pytree
-    structure or a single sharding) reshards onto the current mesh.
-    ShadowedTable shadows (stored as 0-row placeholders) are rebuilt from
-    the restored master."""
-    step = latest_step(ckpt_dir) if step is None else step
-    if step is None:
-        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
-    d = os.path.join(ckpt_dir, f"step_{step}")
-    with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
-        manifest = msgpack.unpackb(f.read())
+            shardings: Optional[Any] = None, verify: bool = True,
+            fallback: bool = True) -> Any:
+    """Verified restore into ``template``'s structure.
+
+    Every leaf is CRC-checked against the manifest; when ``step`` is None
+    and the newest checkpoint is corrupt (torn leaf, missing manifest),
+    restore automatically falls back to the next-newest intact ``step_*``
+    directory (``fallback=False`` raises instead). An explicit ``step``
+    is restored exactly or raises. ``shardings`` (same pytree structure or
+    a single sharding) reshards onto the current mesh. ShadowedTable
+    shadows (stored as 0-row placeholders) are rebuilt from the restored
+    master."""
+    tree, _ = restore_with_step(ckpt_dir, template, step=step,
+                                shardings=shardings, verify=verify,
+                                fallback=fallback)
+    return tree
+
+
+def restore_with_step(ckpt_dir: str, template: Any,
+                      step: Optional[int] = None,
+                      shardings: Optional[Any] = None, verify: bool = True,
+                      fallback: bool = True) -> Tuple[Any, int]:
+    """:func:`restore` + the step number actually restored (which may be
+    older than ``latest_step`` when fallback skipped corrupt saves)."""
     flat_t, treedef = jax.tree_util.tree_flatten(template)
-    assert manifest["num_leaves"] == len(flat_t), \
-        f"leaf count mismatch: ckpt {manifest['num_leaves']} vs {len(flat_t)}"
-    arrs = [np.load(os.path.join(d, f"arr_{i}.npy"))
-            for i in range(len(flat_t))]
+    if step is not None:
+        candidates = [step]
+    else:
+        candidates = intact_steps(ckpt_dir)
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+        if not fallback:
+            candidates = candidates[:1]
+    arrs = None
+    used = None
+    last_err: Optional[Exception] = None
+    for s in candidates:
+        try:
+            arrs, _ = _load_step_arrays(ckpt_dir, s, len(flat_t),
+                                        verify=verify)
+            used = s
+            break
+        except CheckpointCorrupt as e:
+            last_err = e
+            continue
+    if arrs is None:
+        if step is not None:
+            raise last_err or FileNotFoundError(
+                f"no checkpoint step {step} under {ckpt_dir}")
+        raise CheckpointCorrupt(
+            f"no intact checkpoint under {ckpt_dir}: {last_err}")
     if shardings is not None:
         flat_s = (jax.tree_util.tree_leaves(shardings)
                   if not isinstance(shardings, jax.sharding.Sharding)
@@ -180,4 +383,5 @@ def restore(ckpt_dir: str, template: Any, step: Optional[int] = None,
                for a, t, s in zip(arrs, flat_t, flat_s)]
     else:
         out = [jnp.asarray(a).astype(t.dtype) for a, t in zip(arrs, flat_t)]
-    return _rebuild_shadows(jax.tree_util.tree_unflatten(treedef, out))
+    tree = _rebuild_shadows(jax.tree_util.tree_unflatten(treedef, out))
+    return tree, used

@@ -2,13 +2,19 @@
 
 On a real cluster a node failure surfaces as a collective timeout; recovery
 is: (1) rebuild the mesh from the surviving device set, (2) restore the
-latest checkpoint *resharded* onto the new mesh, (3) recompute the data
-partition for the new world size. This module implements those three steps
-as mesh-shape-agnostic functions plus :class:`ElasticRunner`, a supervised
-train loop that exercises the full cycle (tests inject failures).
+latest *intact* checkpoint resharded onto the new mesh, (3) recompute the
+data partition for the new world size. This module implements those three
+steps as mesh-shape-agnostic functions plus :class:`ElasticRunner`, a
+supervised train loop over the staged :class:`repro.training.engine.
+GREngine` — device drops recover *through the pipelined Algorithm-1
+schedule* (the engine's ``run_resilient`` handles per-stage faults and
+checkpointing; the runner adds the mesh-rebuild/reshard cycle on top).
 
 Straggler mitigation is the §4.1.3 load balancer (bounded per-step token
-skew) plus the loader-level timeout/backfill in :meth:`ElasticRunner.run`.
+skew) plus the per-step watchdog here: steps exceeding
+``step_timeout_s`` are recorded as typed ``("straggler", step)`` events —
+typed, because the old encoding (``failures.append(-t)``) was ambiguous
+at step 0 (``-0 == 0``, indistinguishable from a node failure).
 """
 from __future__ import annotations
 
@@ -22,6 +28,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.training import checkpoint as CKPT
+from repro.training import resilience as R
 
 
 def viable_mesh_shape(num_devices: int, model_parallel: int
@@ -55,70 +62,112 @@ def reshard(tree: Any, mesh: Mesh, spec_tree: Any) -> Any:
 
 @dataclass
 class ElasticRunner:
-    """Supervised training loop with checkpoint/restart + elastic shrink.
+    """Supervised GR training with checkpoint/restart + elastic shrink,
+    executed through the staged engine.
 
-    build_step: (mesh) → train_step(state, batch)
-    build_state: (mesh) → fresh state (used only when no checkpoint exists)
-    data_fn: (step, world_size) → batch
+    build_engine: ``(mesh, data_fn) -> GREngine`` — a fresh engine for
+        the given mesh, its data bound to ``data_fn(global_step)`` (the
+        runner derives it from ``self.data_fn`` with the mesh's world
+        size). The engine's ``state`` may be a fresh GRTrainState or
+        None (built on first batch); the runner overwrites it with the
+        restored-and-resharded checkpoint when one exists.
+    data_fn: ``(global_step, world_size) -> batch``.
+    fault_policy: per-stage retry/watchdog/non-finite handling inside
+        each engine segment (:class:`repro.training.resilience.
+        FaultPolicy`).
+    state_specs: PartitionSpec pytree (or single spec) for the resharded
+        restore onto a rebuilt mesh.
+    events: typed ``(kind, step)`` records — ``("node_failure", t)``,
+        ``("straggler", t)``, ``("recovery", t)`` — unambiguous at
+        step 0, unlike the old signed-int encoding.
     """
-    build_step: Callable[[Mesh], Callable]
-    build_state: Callable[[Mesh], Any]
+    build_engine: Callable[[Mesh, Callable[[int], Any]], Any]
     data_fn: Callable[[int, int], Any]
     ckpt_dir: str
     model_parallel: int = 1
     ckpt_every: int = 10
     state_specs: Optional[Any] = None
     step_timeout_s: float = 0.0        # straggler watchdog (0 = off)
+    keep_last_n: Optional[int] = None
+    fault_policy: Optional[R.FaultPolicy] = None
+    fault_injector: Optional[R.FaultInjector] = None
 
-    failures: List[int] = field(default_factory=list)
+    events: List[Tuple[str, int]] = field(default_factory=list)
+    records: List[Dict[str, Any]] = field(default_factory=list)
+    engine: Any = None                 # the last segment's GREngine
+
+    @property
+    def failures(self) -> List[int]:
+        """Steps with simulated node failures (typed view of events)."""
+        return [t for k, t in self.events if k == "node_failure"]
+
+    def _restore(self, engine, mesh) -> int:
+        """Restore the newest intact checkpoint (falling back past torn
+        saves) resharded onto ``mesh``; returns the global resume step
+        (0 when no checkpoint exists — the engine keeps its fresh
+        state)."""
+        template = engine.state
+        try:
+            state, used = CKPT.restore_with_step(self.ckpt_dir, template)
+        except (FileNotFoundError, CKPT.CheckpointCorrupt):
+            return 0
+        if self.state_specs is not None:
+            state = reshard(state, mesh, self.state_specs)
+        engine.state = state
+        return used
 
     def run(self, num_steps: int,
             devices: Optional[Sequence[Any]] = None,
             fail_at: Optional[Dict[int, int]] = None) -> Any:
-        """fail_at: {step: devices_to_drop} — simulated node failures."""
+        """Train to ``num_steps``; ``fail_at: {step: devices_to_drop}``
+        simulates node failures (the live state is discarded — recovery
+        goes through the checkpoint, resharded onto the shrunk mesh).
+        Returns the final engine state."""
         devices = list(devices or jax.devices())
-        fail_at = fail_at or {}
-        mesh = rebuild_mesh(devices, self.model_parallel)
-        step_fn = self.build_step(mesh)
-        ckpt = CKPT.AsyncCheckpointer(self.ckpt_dir)
-
-        start = CKPT.latest_step(self.ckpt_dir)
-        state = self.build_state(mesh)
-        if start is not None:
-            state = CKPT.restore(self.ckpt_dir, state)
-            state = (reshard(state, mesh, self.state_specs)
-                     if self.state_specs is not None else state)
-        t = (start or 0)
-
+        fail_at = dict(fail_at or {})
+        self.records = []
+        t = 0
+        recs: Dict[int, Dict[str, Any]] = {}
         while t < num_steps:
-            if t in fail_at:                       # --- simulated failure
-                drop = fail_at.pop(t)
-                self.failures.append(t)
-                devices = devices[:-drop]
-                ckpt.wait()
-                mesh = rebuild_mesh(devices, self.model_parallel)
-                step_fn = self.build_step(mesh)    # recompile for new mesh
-                state = self.build_state(mesh)
-                last = CKPT.latest_step(self.ckpt_dir)
-                if last is not None:
-                    state = CKPT.restore(self.ckpt_dir, state)
-                    t = last
-                else:
-                    t = 0
-                if self.state_specs is not None:
-                    state = reshard(state, mesh, self.state_specs)
-                continue
+            mesh = rebuild_mesh(devices, self.model_parallel)
+            world = mesh.size
+            engine = self.build_engine(
+                mesh, lambda g, _w=world: self.data_fn(g, _w))
+            self.engine = engine
+            t = self._restore(engine, mesh)
+            # stop this segment at the next injected node failure
+            pending_fail = sorted(s for s in fail_at if s > t)
+            target = (min(pending_fail) if pending_fail else num_steps)
+            target = min(target, num_steps)
 
-            t0 = time.perf_counter()
-            batch = self.data_fn(t, mesh.size)
-            state, metrics = step_fn(state, batch)
-            if self.step_timeout_s and (time.perf_counter() - t0
-                                        > self.step_timeout_s):
-                # straggler: log-and-continue (token realloc bounds skew;
-                # a persistent straggler becomes a failure above)
-                self.failures.append(-t)
-            t += 1
-            if t % self.ckpt_every == 0 or t == num_steps:
-                ckpt.save_async(t, state)
-        ckpt.wait()
-        return state
+            prev_cb = engine.step_callback
+            last_t = {"t": time.perf_counter()}
+
+            def on_step(g, rec, state, _lt=last_t, _cb=prev_cb):
+                now = time.perf_counter()
+                if self.step_timeout_s and \
+                        now - _lt["t"] > self.step_timeout_s:
+                    self.events.append(("straggler", g))
+                _lt["t"] = now
+                recs[g] = rec
+                if _cb:
+                    _cb(g, rec, state)
+
+            engine.step_callback = on_step
+            engine.run_resilient(
+                target, ckpt_dir=self.ckpt_dir,
+                ckpt_every=self.ckpt_every,
+                policy=self.fault_policy, injector=self.fault_injector,
+                keep_last_n=self.keep_last_n,
+                final_save=(target == num_steps), start_step=t)
+            engine.step_callback = prev_cb
+            for ev in engine.recoveries:
+                self.events.append(("recovery", ev.restored_step))
+            t = target
+            if target < num_steps or (target in fail_at):
+                drop = fail_at.pop(target, 0)
+                if drop:
+                    self.events.append(("node_failure", target))
+                    devices = devices[:-drop]
+        self.records = [recs[g] for g in sorted(recs)]
+        return self.engine.state

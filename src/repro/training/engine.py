@@ -46,8 +46,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pipeline import (PipelineHooks, SixStagePipeline, StageEvent,
+from repro.core.pipeline import (PipelineHooks, STAGES, SixStagePipeline,
+                                 StageEvent,
                                  timeline_report as _timeline_report)
+from repro.training import resilience as R
 from repro.training.trainer import (GRTrainState, gr_pending_slots,
                                     gr_train_state, host_unique_candidates,
                                     make_gr_stages, make_gr_train_step)
@@ -126,7 +128,9 @@ class GREngine:
                  lr_dense: float = 4e-3, lr_sparse: float = 4e-3,
                  semi_async: bool = True, schedule: str = "algorithm1",
                  qdtype=jnp.float16, workers: int = 3,
-                 step_callback: Optional[Callable] = None):
+                 step_callback: Optional[Callable] = None,
+                 fault_policy: Optional[R.FaultPolicy] = None,
+                 fault_injector: Optional[R.FaultInjector] = None):
         if schedule not in SCHEDULES:
             raise ValueError(f"schedule must be one of {SCHEDULES}")
         self.bundle = bundle
@@ -140,6 +144,13 @@ class GREngine:
         self.workers = workers
         self.step_callback = step_callback
         self.events: List[StageEvent] = []
+        # -- fault tolerance (training/resilience.py) ----------------------
+        self._policy = fault_policy
+        self._injector = fault_injector
+        self._resume_base = 0            # global step of this run's batch 0
+        self._skips_used = 0
+        self.fault_events: List[tuple] = []   # typed (kind, stage, step)
+        self.recoveries: List[R.RecoveryEvent] = []
 
         lk = dict(loss_kwargs or {})
         input_gather = _input_gather_for(bundle, lk)
@@ -190,6 +201,21 @@ class GREngine:
                           and self.state.pending_ids.shape[0] > 0
                           and bool((np.asarray(self.state.pending_ids)
                                     >= 0).any()))
+        # stage hooks, wrapped with fault injection / retry / watchdog
+        # when a policy or injector is attached (run_resilient sets them);
+        # the unwrapped fast path is byte-for-byte the pre-resilience
+        # engine, so plain runs stay untouched
+        base_fns = {s: getattr(self, f"_hk_{s}") for s in STAGES}
+        if self._policy is not None or self._injector is not None:
+            self._stage_fns = {
+                s: R.wrap_stage_fn(
+                    s, fn, policy=self._policy, injector=self._injector,
+                    global_step=lambda i: self._resume_base + i,
+                    fault_events=self.fault_events,
+                    poison=self._poison_dout if s == "dense_fwd" else None)
+                for s, fn in base_fns.items()}
+        else:
+            self._stage_fns = base_fns
 
     def _land_pending(self):
         st = self.state
@@ -245,15 +271,51 @@ class GREngine:
         self._arts[i] = {**art, "dout": dout}
         return {"i": i}
 
+    def _poison_dout(self, i: int):
+        """FaultInjector 'nan' mutator: NaN the dense_fwd artifact (the GR
+        batch is all integer ids, so a poisoned batch manifests exactly
+        here — a non-finite loss out of the dense stage)."""
+        full = self._arts[i]
+        full["dout"] = full["dout"]._replace(
+            loss=jnp.full_like(full["dout"].loss, jnp.nan))
+
     def _hk_dense_bwd(self, i: int, art):
         full = self._arts[i]
         loss = float(full["dout"].loss)   # realize the dispatched fwd+bwd
         tokens = int(np.asarray(full["np"]["offsets"])[:, -1].sum())
-        return {"step": i, "loss": loss, "tokens": tokens}
+        rec = {"step": i, "loss": loss, "tokens": tokens}
+        pol = self._policy
+        if pol is not None and pol.guard_nonfinite:
+            bad = not np.isfinite(loss)
+            if not bad and pol.guard_grads:
+                bad = not R.all_finite(full["dout"].grads_dense)
+            if bad:
+                g = self._resume_base + i
+                if (pol.nonfinite_action == "skip"
+                        and self._skips_used < pol.max_skips):
+                    self._skips_used += 1
+                    self.fault_events.append(
+                        ("skip_nonfinite", "dense_bwd", g))
+                    rec["skipped"] = True
+                else:
+                    raise R.NonFiniteLossError(
+                        f"non-finite loss at step {g} "
+                        f"(skip budget {pol.max_skips} exhausted)"
+                        if pol.nonfinite_action == "skip" else
+                        f"non-finite loss at step {g}")
+        return rec
 
     def _hk_emb_bwd(self, i: int, rec, *, defer_sparse: bool = False):
         full = self._arts.pop(i)
         st = self.state
+        if rec.get("skipped"):
+            # non-finite guard dropped this batch: no optimizer step, no
+            # pairs — the state is untouched and the current state is its
+            # own carry-convention snapshot
+            self._bcache[i] = None
+            if self.step_callback:
+                self.step_callback(i, rec, st)
+            return rec
         cand_s, cand_f = full["cand"]
         if self.semi_async:
             # checkpoints/callbacks always see the carry-convention
@@ -293,11 +355,7 @@ class GREngine:
         return rec
 
     def _make_hooks(self) -> PipelineHooks:
-        return PipelineHooks(
-            dataload=self._hk_dataload, a2a=self._hk_a2a,
-            unique=self._hk_unique, emb_fwd=self._hk_emb_fwd,
-            dense_fwd=self._hk_dense_fwd, dense_bwd=self._hk_dense_bwd,
-            emb_bwd=self._hk_emb_bwd)
+        return PipelineHooks(**self._stage_fns)
 
     # -- run ---------------------------------------------------------------
     def run(self, steps: int) -> List[Dict[str, Any]]:
@@ -318,18 +376,18 @@ class GREngine:
         i−1's pairs land *after* batch i's prefetched input gather."""
         results = []
 
-        def stage(name, i, fn, *a, **kw):
+        def stage(name, i, *a, **kw):
             t0 = time.perf_counter()
-            out = fn(i, *a, **kw)
+            out = self._stage_fns[name](i, *a, **kw)
             self.events.append(StageEvent(name, i, t0, time.perf_counter()))
             return out
 
         self._leftover = False            # flat lands pending every step
         for i in range(steps):
-            nb = stage("dataload", i, self._hk_dataload)
-            art = stage("a2a", i, self._hk_a2a, nb)
-            art = stage("unique", i, self._hk_unique, art)
-            art = stage("emb_fwd", i, self._hk_emb_fwd, art)
+            nb = stage("dataload", i)
+            art = stage("a2a", i, nb)
+            art = stage("unique", i, art)
+            art = stage("emb_fwd", i, art)
             if self.semi_async:
                 # the sparse half of emb_bwd(i−1): the delayed landing
                 t0 = time.perf_counter()
@@ -338,11 +396,174 @@ class GREngine:
                     self.events.append(
                         StageEvent("emb_bwd", i - 1, t0,
                                    time.perf_counter()))
-            small = stage("dense_fwd", i, self._hk_dense_fwd, art)
-            rec = stage("dense_bwd", i, self._hk_dense_bwd, small)
-            stage("emb_bwd", i, self._hk_emb_bwd, rec, defer_sparse=True)
+            small = stage("dense_fwd", i, art)
+            rec = stage("dense_bwd", i, small)
+            stage("emb_bwd", i, rec, defer_sparse=True)
             results.append(rec)
         return results
+
+    # -- supervised recovery ----------------------------------------------
+    def _global_fetch(self) -> Callable[[int], Any]:
+        """Deterministic global-step → batch mapping that survives
+        recovery replays. ``data_fn`` engines re-fetch on demand; loader
+        engines pull from one persistent iterator into a cache, because
+        ``GRLoader.batches`` is RNG-stateful and restarting it would
+        change the replayed batches (the cache is bounded by the run
+        length — resilient runs hold their batch window like the
+        pipelined schedule holds its lookahead)."""
+        cache: Dict[int, Any] = {}
+        if self._data_fn is not None:
+            src = self._data_fn
+
+            def fetch(g: int):
+                if g not in cache:
+                    cache[g] = src(g)
+                return cache[g]
+            return fetch
+        loader, it = self.loader, None
+
+        def fetch_loader(g: int):
+            nonlocal it
+            if it is None:
+                it = loader.batches(self._resilient_steps)
+            while len(cache) <= g:
+                cache[len(cache)] = next(it)
+            return cache[g]
+        return fetch_loader
+
+    def _write_ckpt(self, saver, ckpt_dir: str, step_num: int, snapshot,
+                    keep_last_n) -> None:
+        """One checkpoint write inside a resilient run: the snapshot is
+        always the carry-convention state (τ=1 pairs pending + pre-landing
+        table). A torn-save injection site for this step crashes the write
+        exactly as a real mid-save failure would (wreckage on disk, then
+        the process dies) — recovery must fall back to the previous
+        intact step."""
+        spec = (self._injector.take(R.SAVE_SITE, step_num)
+                if self._injector else None)
+        if spec is not None and spec.kind == "torn_save":
+            if saver is not None:
+                try:
+                    saver.wait()          # serialize with in-flight save
+                except Exception:
+                    pass
+            self.fault_events.append(("torn_save", R.SAVE_SITE, step_num))
+            R.simulate_torn_save(ckpt_dir, step_num, snapshot,
+                                 tear=spec.tear)
+            raise R.InjectedFault(
+                f"crash mid-save of step {step_num} ({spec.tear})")
+        if saver is not None:
+            saver.save_async(step_num, snapshot)
+        else:
+            from repro.training import checkpoint as CKPT
+            CKPT.save(ckpt_dir, step_num, snapshot,
+                      keep_last_n=keep_last_n)
+
+    def run_resilient(self, steps: int, *, ckpt_dir: str,
+                      ckpt_every: int = 10,
+                      policy: Optional[R.FaultPolicy] = None,
+                      injector: Optional[R.FaultInjector] = None,
+                      keep_last_n: Optional[int] = None,
+                      async_save: bool = True, final_save: bool = True,
+                      start_step: Optional[int] = None
+                      ) -> List[Dict[str, Any]]:
+        """Train to global step ``steps`` under supervision: periodic
+        crash-consistent checkpoints every ``ckpt_every`` steps, per-stage
+        retry/watchdog/non-finite handling per ``policy``, and on any
+        escalated stage failure a full recovery cycle — the pipeline
+        drains deterministically (every in-flight hook joins), the newest
+        *intact* checkpoint is restored (falling back past torn saves; the
+        run's initial state if none exists yet), and the remaining steps
+        replay. Checkpoints hold the carry-convention snapshot (τ=1
+        pending pairs + pre-landing table — the only resume-equivalent
+        form), so a failed-and-recovered run is bit-identical to an
+        uninterrupted one for both schedules, sync and τ=1
+        (tests/test_resilience.py).
+
+        Returns the per-step records for global steps ``[start, steps)``
+        in order (``start`` defaults to ``state.step``; records replayed
+        after a recovery overwrite their first, identical, incarnation).
+        ``engine.fault_events`` collects typed ``(kind, stage, step)``
+        events and ``engine.recoveries`` one :class:`RecoveryEvent` per
+        restore cycle.
+        """
+        from repro.training import checkpoint as CKPT
+        pol = policy if policy is not None else R.FaultPolicy()
+        prev_pol, prev_inj = self._policy, self._injector
+        prev_cb, prev_data = self.step_callback, self._data_fn
+        self._policy, self._injector = pol, injector
+        self.fault_events = []
+        self.recoveries = []
+        self._skips_used = 0
+        self._resilient_steps = steps
+        base0 = (start_step if start_step is not None
+                 else (int(self.state.step) if self.state is not None
+                       else 0))
+        if base0 >= steps:
+            return []
+        fetch = self._global_fetch()
+        records: Dict[int, Dict[str, Any]] = {}
+        saver = (CKPT.AsyncCheckpointer(ckpt_dir, keep_last_n=keep_last_n)
+                 if async_save else None)
+        initial = self.state           # replay-from-scratch anchor
+
+        def on_step(i: int, rec: Dict[str, Any], snapshot) -> None:
+            g = self._resume_base + i
+            grec = dict(rec, step=g)
+            records[g] = grec
+            if prev_cb:
+                prev_cb(g, grec, snapshot)
+            done = g + 1
+            if (ckpt_every and done % ckpt_every == 0) or \
+                    (final_save and done == steps):
+                self._write_ckpt(saver, ckpt_dir, done, snapshot,
+                                 keep_last_n)
+
+        self.step_callback = on_step
+        prev_loader, self.loader = self.loader, None
+        self._data_fn = lambda i: fetch(self._resume_base + i)
+        base = base0
+        try:
+            while True:
+                self._resume_base = base
+                try:
+                    self.run(steps - base)
+                    break
+                except Exception as err:
+                    t0 = time.perf_counter()
+                    if saver is not None:
+                        try:
+                            saver.wait()   # surface/serialize async saves
+                        except Exception:
+                            pass           # a torn async save is recovered
+                    if len(self.recoveries) >= pol.max_recoveries:
+                        raise
+                    failed = max(records, default=base - 1) + 1
+                    try:
+                        self.state, used = CKPT.restore_with_step(
+                            ckpt_dir, self.state)
+                    except (FileNotFoundError, CKPT.CheckpointCorrupt):
+                        # no intact checkpoint yet: replay from scratch —
+                        # the initial state (or its seed-deterministic
+                        # re-init when the run built it) anchors step 0
+                        self.state, used = initial, base0
+                    for g in [g for g in records if g >= used]:
+                        del records[g]
+                    base = used
+                    self.recoveries.append(R.RecoveryEvent(
+                        failed_step=failed, restored_step=used,
+                        error=repr(err),
+                        wall_s=time.perf_counter() - t0))
+                    self.fault_events.append(
+                        ("recovered", "engine", used))
+        finally:
+            self.step_callback = prev_cb
+            self._policy, self._injector = prev_pol, prev_inj
+            self._data_fn, self.loader = prev_data, prev_loader
+            self._resume_base = 0
+            if saver is not None:
+                saver.wait()
+        return [records[g] for g in sorted(records)]
 
     # -- reporting ---------------------------------------------------------
     def timeline_report(self) -> Dict[str, float]:

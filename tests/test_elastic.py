@@ -1,14 +1,19 @@
-"""Fault tolerance: checkpoint/restart + elastic mesh shrink."""
-import os
+"""Fault tolerance: checkpoint/restart + elastic mesh shrink through the
+staged GREngine."""
 import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs import ARCHS, reduced
+from repro.data.synthetic import synth_jagged_batch
+from repro.models.model_zoo import get_bundle
 from repro.training import checkpoint as CKPT
 from repro.training.elastic import (ElasticRunner, rebuild_mesh, reshard,
                                     viable_mesh_shape)
+from repro.training.engine import GREngine, make_gr_step_fn
+from repro.training.trainer import gr_pending_slots, gr_train_state
 
 
 def test_viable_mesh_shape():
@@ -18,35 +23,76 @@ def test_viable_mesh_shape():
     assert viable_mesh_shape(12, 4) == (3, 4)
 
 
-def test_elastic_runner_survives_failure():
-    """Simulated node loss mid-run: runner must restore from the latest
-    checkpoint, rebuild a smaller mesh, and finish all steps."""
+def _gr_fixture():
+    cfg = reduced(ARCHS["hstu-tiny"]).replace(num_negatives=4,
+                                              vocab_size=256)
+    b = get_bundle(cfg)
+    key = jax.random.PRNGKey(0)
+    lk = dict(neg_mode="fused", neg_segment=32)
+
+    def data_fn(t, world):
+        return synth_jagged_batch(jax.random.PRNGKey(t % 3), 2, 64, 256, 4,
+                                  offsets=[[0, 32, 64], [0, 50, 60]])
+
+    def mk_state():
+        return gr_train_state(b.init_dense(key), b.init_table(key),
+                              pending_slots=gr_pending_slots(
+                                  data_fn(0, 1)))
+    return b, lk, data_fn, mk_state
+
+
+def test_elastic_runner_survives_failure_through_pipeline():
+    """Simulated node loss mid-run: the runner must restore the latest
+    intact checkpoint, rebuild a smaller mesh, resume THROUGH the
+    pipelined Algorithm-1 schedule, and end bit-identical to an
+    uninterrupted fused-step run (τ=1 carry included)."""
+    b, lk, data_fn, mk_state = _gr_fixture()
+    N = 10
+
+    # uninterrupted fused-step oracle
+    step = make_gr_step_fn(b, loss_kwargs=lk, semi_async=True)
+    st, losses = mk_state(), []
+    for i in range(N):
+        st, m = step(st, data_fn(i, 1))
+        losses.append(float(m["loss"]))
+
     with tempfile.TemporaryDirectory() as d:
-        def build_step(mesh):
-            def step(state, batch):
-                w = state["w"]
-                g = jax.grad(lambda w: jnp.mean((w * batch["x"] -
-                                                 batch["y"]) ** 2))(w)
-                return {"w": w - 0.1 * g, "step": state["step"] + 1}, {}
-            return jax.jit(step)
+        def build_engine(mesh, fetch):
+            return GREngine(b, fetch, state=mk_state(), loss_kwargs=lk,
+                            semi_async=True, schedule="algorithm1")
 
-        def build_state(mesh):
-            return {"w": jnp.ones((8,)), "step": jnp.int32(0)}
+        r = ElasticRunner(build_engine=build_engine, data_fn=data_fn,
+                          ckpt_dir=d, model_parallel=1, ckpt_every=3)
+        final = r.run(N, devices=list(jax.devices()) * 4,  # pretend 4 dev
+                      fail_at={7: 2})
+        assert r.events == [("node_failure", 7)], r.events
+        assert r.failures == [7]
+        assert CKPT.latest_step(d) == N
+        # steps 6..7 were lost (last ckpt at 6) and replayed through the
+        # restored engine — trajectory must match the oracle exactly
+        assert [rec["loss"] for rec in r.records] == losses
+        for a, c in zip(jax.tree.leaves(st), jax.tree.leaves(final)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
 
-        def data_fn(t, world):
-            k = jax.random.PRNGKey(t)
-            return {"x": jax.random.normal(k, (8,)),
-                    "y": jax.random.normal(jax.random.PRNGKey(t + 1), (8,))}
 
-        r = ElasticRunner(build_step=build_step, build_state=build_state,
-                          data_fn=data_fn, ckpt_dir=d, model_parallel=1,
-                          ckpt_every=5)
-        final = r.run(20, devices=jax.devices() * 4,   # pretend 4 devices
-                      fail_at={12: 2})
-        assert r.failures == [12]
-        assert CKPT.latest_step(d) == 20
-        # determinism: the final step count is exactly 20
-        assert int(final["step"]) >= 15  # restored at 10, replayed 10..20
+def test_elastic_runner_typed_straggler_events_step0():
+    """Straggler accounting is typed (kind, step) — a straggler at step 0
+    must be distinguishable from a node failure at step 0 (the old
+    ``failures.append(-t)`` encoding collapsed both to 0)."""
+    b, lk, data_fn, mk_state = _gr_fixture()
+    with tempfile.TemporaryDirectory() as d:
+        def build_engine(mesh, fetch):
+            return GREngine(b, fetch, state=mk_state(), loss_kwargs=lk,
+                            semi_async=True, schedule="flat")
+
+        r = ElasticRunner(build_engine=build_engine, data_fn=data_fn,
+                          ckpt_dir=d, ckpt_every=10,
+                          step_timeout_s=1e-9)     # everything straggles
+        r.run(2)
+        kinds = {k for k, _ in r.events}
+        assert kinds == {"straggler"}, r.events
+        assert ("straggler", 0) in r.events
+        assert r.failures == []                    # typed: not a failure
 
 
 def test_reshard_roundtrip_single_device():

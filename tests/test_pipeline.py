@@ -137,6 +137,47 @@ def test_no_stage_invoked_out_of_range(steps):
     assert all(i >= steps - 1 for (_, i) in p._artifacts)
 
 
+class _BoomError(RuntimeError):
+    pass
+
+
+@pytest.mark.parametrize("fail_stage", ["dataload", "a2a", "unique",
+                                        "emb_fwd", "dense_fwd",
+                                        "dense_bwd", "emb_bwd"])
+@pytest.mark.parametrize("fail_step", [0, 3, 7])
+def test_hook_failure_drains_pipeline(fail_stage, fail_step):
+    """A hook raising at ANY stage × step must propagate the ORIGINAL
+    error out of run() (not a secondary error from an abandoned future)
+    and leave the executor fully drained: no leaked futures, no pool
+    thread still alive — the precondition for the engine's supervised
+    recovery to restore and re-run on a clean slate."""
+    log = []
+
+    def mk(name):
+        def fn(i, *a):
+            if name == fail_stage and i == fail_step:
+                raise _BoomError(f"{name}@{i}")
+            log.append((name, i))
+            return (name, i)
+        return fn
+
+    hooks = PipelineHooks(**{s: mk(s) for s in
+                             ("dataload", "a2a", "unique", "emb_fwd",
+                              "dense_fwd", "dense_bwd", "emb_bwd")})
+    p = SixStagePipeline(hooks, workers=3)
+    with pytest.raises(_BoomError, match=f"{fail_stage}@{fail_step}"):
+        p.run(10)
+    assert not p._futures, "leaked futures after failed run()"
+    # shutdown(wait=True) ran: every pool thread has terminated
+    for th in p.pool._threads:
+        th.join(timeout=5.0)
+        assert not th.is_alive(), "pool thread survived drain"
+    # a fresh pipeline still works after the failed one (no global state)
+    log2 = []
+    p2 = SixStagePipeline(_hooks(log2, {}), workers=3)
+    assert [r[1] for r in p2.run(3)] == [0, 1, 2]
+
+
 def _tiny_engine(schedule, steps=5):
     import jax
 

@@ -1,0 +1,396 @@
+"""Fault-tolerant pipelined training: crash-consistent checkpoints,
+deterministic fault injection, supervised recovery through GREngine.
+
+The core acceptance property: for every injected fault site — each of the
+seven pipeline stages, plus a crash mid-checkpoint-write — a run that
+fails and recovers produces final GRTrainState (master, shadow, AdaGrad
+accum, pending τ=1 pairs) and per-step losses bit-identical to an
+uninterrupted run, in both schedules, sync and τ=1.
+"""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.core.pipeline import STAGES
+from repro.data.synthetic import synth_jagged_batch
+from repro.models.model_zoo import get_bundle
+from repro.training import checkpoint as CKPT
+from repro.training import resilience as R
+from repro.training.engine import GREngine, make_gr_step_fn
+from repro.training.trainer import gr_pending_slots, gr_train_state
+
+N_STEPS = 8
+
+
+@pytest.fixture(scope="module")
+def gr():
+    cfg = reduced(ARCHS["hstu-tiny"]).replace(num_negatives=4,
+                                              vocab_size=256)
+    b = get_bundle(cfg)
+    key = jax.random.PRNGKey(0)
+    lk = dict(neg_mode="fused", neg_segment=32)
+
+    def batch(i):
+        return synth_jagged_batch(jax.random.PRNGKey(i % 3), 2, 64, 256, 4,
+                                  offsets=[[0, 32, 64], [0, 50, 60]])
+
+    def mk_state():
+        return gr_train_state(b.init_dense(key), b.init_table(key),
+                              pending_slots=gr_pending_slots(batch(0)))
+    return b, batch, mk_state, lk
+
+
+@pytest.fixture(scope="module")
+def baselines(gr):
+    """Uninterrupted fused-step oracle per semi_async mode."""
+    b, batch, mk_state, lk = gr
+    out = {}
+    for semi_async in (False, True):
+        step = make_gr_step_fn(b, loss_kwargs=lk, semi_async=semi_async)
+        st, losses = mk_state(), []
+        for i in range(N_STEPS):
+            st, m = step(st, batch(i))
+            losses.append(float(m["loss"]))
+        out[semi_async] = (st, losses)
+    return out
+
+
+def _assert_state_equal(expect, got, msg=""):
+    for a, c in zip(jax.tree.leaves(expect), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c),
+                                      err_msg=msg)
+
+
+# --------------------------------------------------------------------------
+# fault-site sweep: all 7 stages + mid-save crash, bit-identical recovery
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("schedule", ["algorithm1", "flat"])
+@pytest.mark.parametrize("semi_async", [True, False])
+def test_every_fault_site_recovers_bit_identical(gr, baselines, schedule,
+                                                 semi_async):
+    """One resilient run per (schedule, sync-mode) combo, with an injected
+    host exception at EVERY stage (each at a different step) plus a torn
+    checkpoint write mid-run: eight recovery cycles, and the final state +
+    losses still match the uninterrupted oracle exactly."""
+    b, batch, mk_state, lk = gr
+    st_ref, losses = baselines[semi_async]
+    faults = [R.FaultSpec(stage, 1 + k, "exception")
+              for k, stage in enumerate(STAGES)]
+    faults.append(R.FaultSpec(R.SAVE_SITE, 4, "torn_save",
+                              tear="partial_dir"))
+    with tempfile.TemporaryDirectory() as d:
+        inj = R.FaultInjector(faults)
+        eng = GREngine(b, batch, state=mk_state(), loss_kwargs=lk,
+                       semi_async=semi_async, schedule=schedule)
+        recs = eng.run_resilient(
+            N_STEPS, ckpt_dir=d, ckpt_every=2,
+            policy=R.FaultPolicy(retries={}, max_recoveries=16),
+            injector=inj)
+        assert inj.exhausted, inj._pending       # every site actually fired
+        assert len(eng.recoveries) == len(faults), eng.recoveries
+        assert [r["loss"] for r in recs] == losses, (schedule, semi_async)
+        assert [r["step"] for r in recs] == list(range(N_STEPS))
+        _assert_state_equal(st_ref, eng.state,
+                            f"{schedule} semi_async={semi_async}")
+        # the torn save left wreckage that restore skipped over
+        assert ("torn_save", R.SAVE_SITE, 4) in eng.fault_events
+        # recovery always replayed from an intact earlier step
+        for ev in eng.recoveries:
+            assert ev.restored_step <= ev.failed_step
+            assert ev.steps_lost <= 2 + 5        # ckpt_every + lookahead
+
+
+def test_mid_save_crash_each_tear_flavour(gr, baselines):
+    """A crash mid-save — partial dir, truncated published leaf, torn
+    LATEST pointer — must each fall back to the previous intact step and
+    recover bit-identically."""
+    b, batch, mk_state, lk = gr
+    st_ref, losses = baselines[True]
+    for tear in ("partial_dir", "truncated", "torn_latest"):
+        with tempfile.TemporaryDirectory() as d:
+            inj = R.FaultInjector(
+                [R.FaultSpec(R.SAVE_SITE, 6, "torn_save", tear=tear)])
+            eng = GREngine(b, batch, state=mk_state(), loss_kwargs=lk,
+                           semi_async=True, schedule="algorithm1")
+            recs = eng.run_resilient(
+                N_STEPS, ckpt_dir=d, ckpt_every=2,
+                policy=R.FaultPolicy(retries={}), injector=inj)
+            assert [r["loss"] for r in recs] == losses, tear
+            _assert_state_equal(st_ref, eng.state, tear)
+            assert len(eng.recoveries) == 1
+            # partial_dir / truncated wreck the step-6 save → fall back to
+            # step 4; torn_latest only tears the pointer (the save itself
+            # is intact) → the scan still finds step 6
+            want = 6 if tear == "torn_latest" else 4
+            assert eng.recoveries[0].restored_step == want, tear
+
+
+def test_retry_recovers_transient_fault_without_restore(gr, baselines):
+    """A transient host fault under the per-stage retry budget must be
+    absorbed in place: no recovery cycle, trajectory untouched."""
+    b, batch, mk_state, lk = gr
+    st_ref, losses = baselines[True]
+    with tempfile.TemporaryDirectory() as d:
+        inj = R.FaultInjector([R.FaultSpec("dataload", 2, "exception"),
+                               R.FaultSpec("unique", 5, "exception")])
+        eng = GREngine(b, batch, state=mk_state(), loss_kwargs=lk,
+                       semi_async=True, schedule="algorithm1")
+        recs = eng.run_resilient(
+            N_STEPS, ckpt_dir=d, ckpt_every=3,
+            policy=R.FaultPolicy(retries={"dataload": 2, "unique": 1}),
+            injector=inj)
+        assert eng.recoveries == []
+        kinds = [k for (k, _, _) in eng.fault_events]
+        assert kinds.count("retry") == 2, eng.fault_events
+        assert [r["loss"] for r in recs] == losses
+        _assert_state_equal(st_ref, eng.state)
+
+
+def test_watchdog_flags_and_fails_stragglers(gr, baselines):
+    """An injected delay over the stage watchdog budget is recorded as a
+    typed straggler event (action="record", math untouched); with
+    action="fail" it escalates to a recovery cycle — still
+    bit-identical."""
+    b, batch, mk_state, lk = gr
+    st_ref, losses = baselines[True]
+    for action, want_recoveries in (("record", 0), ("fail", 1)):
+        with tempfile.TemporaryDirectory() as d:
+            inj = R.FaultInjector(
+                [R.FaultSpec("unique", 3, "delay", delay_s=0.05)])
+            eng = GREngine(b, batch, state=mk_state(), loss_kwargs=lk,
+                           semi_async=True, schedule="algorithm1")
+            recs = eng.run_resilient(
+                N_STEPS, ckpt_dir=d, ckpt_every=2,
+                policy=R.FaultPolicy(
+                    retries={}, stage_timeout_s={"unique": 0.01},
+                    straggler_action=action),
+                injector=inj)
+            assert ("straggler", "unique", 3) in eng.fault_events, action
+            assert len(eng.recoveries) == want_recoveries, action
+            assert [r["loss"] for r in recs] == losses, action
+            _assert_state_equal(st_ref, eng.state, action)
+
+
+def test_nan_poison_recovers_bit_identical(gr, baselines):
+    """A NaN-poisoned batch under nonfinite_action="recover" escalates to
+    checkpoint recovery; the replay (poison fires once) is clean and the
+    run ends bit-identical."""
+    b, batch, mk_state, lk = gr
+    st_ref, losses = baselines[True]
+    for schedule in ("algorithm1", "flat"):
+        with tempfile.TemporaryDirectory() as d:
+            inj = R.FaultInjector([R.FaultSpec("dense_fwd", 4, "nan")])
+            eng = GREngine(b, batch, state=mk_state(), loss_kwargs=lk,
+                           semi_async=True, schedule=schedule)
+            recs = eng.run_resilient(
+                N_STEPS, ckpt_dir=d, ckpt_every=2,
+                policy=R.FaultPolicy(retries={},
+                                     nonfinite_action="recover"),
+                injector=inj)
+            assert len(eng.recoveries) == 1, schedule
+            assert "non-finite" in eng.recoveries[0].error
+            assert [r["loss"] for r in recs] == losses, schedule
+            _assert_state_equal(st_ref, eng.state, schedule)
+
+
+def test_nan_skip_budget(gr):
+    """nonfinite_action="skip" drops the poisoned batch's update (state
+    untouched for that step) under the skip budget; the budget exhausting
+    escalates instead of skipping forever."""
+    b, batch, mk_state, lk = gr
+    with tempfile.TemporaryDirectory() as d:
+        inj = R.FaultInjector([R.FaultSpec("dense_fwd", 3, "nan")])
+        eng = GREngine(b, batch, state=mk_state(), loss_kwargs=lk,
+                       semi_async=True, schedule="algorithm1")
+        recs = eng.run_resilient(
+            N_STEPS, ckpt_dir=d, ckpt_every=4,
+            policy=R.FaultPolicy(retries={}, nonfinite_action="skip",
+                                 max_skips=2),
+            injector=inj)
+        assert eng.recoveries == []
+        assert len(recs) == N_STEPS
+        skipped = [r for r in recs if r.get("skipped")]
+        assert [r["step"] for r in skipped] == [3]
+        assert not np.isfinite(skipped[0]["loss"])
+        others = [r["loss"] for r in recs if not r.get("skipped")]
+        assert all(np.isfinite(l) for l in others)
+        assert ("skip_nonfinite", "dense_bwd", 3) in eng.fault_events
+        # the skipped batch contributed no update: step counter is N-1
+        assert int(eng.state.step) == N_STEPS - 1
+    # budget exhausted (max_skips=0) + no recovery budget → escalates
+    with tempfile.TemporaryDirectory() as d:
+        inj = R.FaultInjector([R.FaultSpec("dense_fwd", 3, "nan")])
+        eng = GREngine(b, batch, state=mk_state(), loss_kwargs=lk,
+                       semi_async=True, schedule="algorithm1")
+        with pytest.raises(R.NonFiniteLossError):
+            eng.run_resilient(
+                N_STEPS, ckpt_dir=d, ckpt_every=4,
+                policy=R.FaultPolicy(retries={}, nonfinite_action="skip",
+                                     max_skips=0, max_recoveries=0),
+                injector=inj)
+
+
+def test_persistent_fault_exhausts_recovery_budget(gr):
+    """A fault that refires on every replay must stop after
+    max_recoveries restore cycles, re-raising the original error."""
+    b, batch, mk_state, lk = gr
+    faults = [R.FaultSpec("dense_fwd", 3, "exception") for _ in range(10)]
+    with tempfile.TemporaryDirectory() as d:
+        inj = R.FaultInjector(faults)       # refires 10× at the same site
+        eng = GREngine(b, batch, state=mk_state(), loss_kwargs=lk,
+                       semi_async=True, schedule="algorithm1")
+        with pytest.raises(R.InjectedFault):
+            eng.run_resilient(N_STEPS, ckpt_dir=d, ckpt_every=2,
+                              policy=R.FaultPolicy(retries={},
+                                                   max_recoveries=3),
+                              injector=inj)
+        assert len(eng.recoveries) == 3
+
+
+def test_failure_before_first_checkpoint_replays_from_scratch(gr,
+                                                              baselines):
+    """A fault before any checkpoint exists restores nothing — the run
+    replays from its initial state and still ends bit-identical."""
+    b, batch, mk_state, lk = gr
+    st_ref, losses = baselines[True]
+    with tempfile.TemporaryDirectory() as d:
+        inj = R.FaultInjector([R.FaultSpec("dense_bwd", 1, "exception")])
+        eng = GREngine(b, batch, state=mk_state(), loss_kwargs=lk,
+                       semi_async=True, schedule="algorithm1")
+        recs = eng.run_resilient(N_STEPS, ckpt_dir=d, ckpt_every=100,
+                                 policy=R.FaultPolicy(retries={}),
+                                 injector=inj)
+        assert len(eng.recoveries) == 1
+        assert eng.recoveries[0].restored_step == 0
+        assert [r["loss"] for r in recs] == losses
+        _assert_state_equal(st_ref, eng.state)
+
+
+# --------------------------------------------------------------------------
+# checkpoint crash consistency
+# --------------------------------------------------------------------------
+
+def _tree(v=1.0):
+    return {"a": jnp.arange(6.0).reshape(2, 3) * v,
+            "b": {"c": jnp.ones((4,)) * v}, "n": jnp.int32(7)}
+
+
+def test_restore_falls_back_past_truncated_leaf():
+    with tempfile.TemporaryDirectory() as d:
+        CKPT.save(d, 1, _tree(1.0))
+        CKPT.save(d, 2, _tree(2.0))
+        victim = os.path.join(d, "step_2", "arr_0.npy")
+        with open(victim, "r+b") as f:
+            f.truncate(os.path.getsize(victim) // 2)
+        got, used = CKPT.restore_with_step(d, _tree())
+        assert used == 1
+        np.testing.assert_allclose(np.asarray(got["a"]),
+                                   np.asarray(_tree(1.0)["a"]))
+        # explicit step restore of the corrupt save raises, no fallback
+        with pytest.raises(CKPT.CheckpointCorrupt):
+            CKPT.restore(d, _tree(), step=2)
+
+
+def test_restore_falls_back_past_crc_mismatch():
+    """A bit-flipped leaf that still np.loads cleanly is caught by the
+    manifest CRC32 and skipped."""
+    with tempfile.TemporaryDirectory() as d:
+        CKPT.save(d, 1, _tree(1.0))
+        CKPT.save(d, 2, _tree(2.0))
+        victim = os.path.join(d, "step_2", "arr_0.npy")
+        data = bytearray(open(victim, "rb").read())
+        data[-1] ^= 0xFF                        # flip a payload byte
+        open(victim, "wb").write(bytes(data))
+        got, used = CKPT.restore_with_step(d, _tree())
+        assert used == 1
+
+
+def test_restore_falls_back_past_missing_manifest():
+    with tempfile.TemporaryDirectory() as d:
+        CKPT.save(d, 1, _tree(1.0))
+        CKPT.save(d, 3, _tree(3.0))
+        os.remove(os.path.join(d, "step_3", "manifest.msgpack"))
+        assert CKPT.latest_step(d) == 1         # pointer is dangling
+        got, used = CKPT.restore_with_step(d, _tree())
+        assert used == 1
+
+
+def test_latest_step_torn_pointer_falls_back():
+    """A torn or dangling LATEST must not silently restart from step 0 —
+    latest_step scans step_* dirs for the newest intact manifest."""
+    with tempfile.TemporaryDirectory() as d:
+        CKPT.save(d, 4, _tree())
+        CKPT.save(d, 9, _tree())
+        with open(os.path.join(d, "LATEST"), "w") as f:
+            f.write("step_")                    # torn mid-write
+        assert CKPT.latest_step(d) == 9
+        with open(os.path.join(d, "LATEST"), "w") as f:
+            f.write("step_12")                  # dangling pointer
+        assert CKPT.latest_step(d) == 9
+        os.remove(os.path.join(d, "LATEST"))    # pointer lost entirely
+        assert CKPT.latest_step(d) == 9
+        assert CKPT.intact_steps(d) == [9, 4]
+
+
+def test_latest_step_empty_dir():
+    with tempfile.TemporaryDirectory() as d:
+        assert CKPT.latest_step(d) is None
+        assert CKPT.latest_step(os.path.join(d, "nope")) is None
+
+
+def test_no_intact_checkpoint_raises():
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(FileNotFoundError):
+            CKPT.restore(d, _tree())
+        CKPT.save(d, 1, _tree())
+        os.remove(os.path.join(d, "step_1", "manifest.msgpack"))
+        with pytest.raises(FileNotFoundError):
+            CKPT.restore(d, _tree())
+
+
+def test_keep_last_n_retention():
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3, 4, 5):
+            CKPT.save(d, s, _tree(float(s)), keep_last_n=2)
+        assert CKPT.intact_steps(d) == [5, 4]
+        assert CKPT.latest_step(d) == 5
+        # stale tmp wreckage from a crashed save is collected too
+        os.makedirs(os.path.join(d, ".tmp_step_9_x"))
+        CKPT.save(d, 6, _tree(6.0), keep_last_n=2)
+        assert CKPT.intact_steps(d) == [6, 5]
+        assert not [n for n in os.listdir(d) if n.startswith(".tmp")]
+
+
+def test_async_checkpointer_keep_last_n():
+    with tempfile.TemporaryDirectory() as d:
+        ck = CKPT.AsyncCheckpointer(d, keep_last_n=1)
+        ck.save_async(1, _tree(1.0))
+        ck.wait()
+        ck.save_async(2, _tree(2.0))
+        ck.wait()
+        assert CKPT.intact_steps(d) == [2]
+
+
+def test_simulate_torn_save_flavours_are_skipped():
+    for tear in ("partial_dir", "truncated", "torn_latest"):
+        with tempfile.TemporaryDirectory() as d:
+            CKPT.save(d, 1, _tree(1.0))
+            R.simulate_torn_save(d, 2, _tree(2.0), tear=tear)
+            got, used = CKPT.restore_with_step(d, _tree())
+            if tear == "torn_latest":
+                assert used == 2    # the save itself is intact
+                assert CKPT.latest_step(d) == 2
+            elif tear == "truncated":
+                # manifest is intact (latest_step's cheap check passes)
+                # but the leaf CRC fails at restore → fall back
+                assert used == 1
+                assert CKPT.latest_step(d) == 2
+            else:
+                assert used == 1, tear
+                assert CKPT.latest_step(d) == 1   # no manifest at all
