@@ -1,0 +1,152 @@
+"""Host-offloaded embedding cache: vocab beyond the HBM row budget.
+
+The §4.3.1 regime: the fp32 master + fp16 shadow + AdaGrad accum of a
+production GR vocabulary do not fit device HBM. ``CachedShadowedTable``
+trains with a device-resident window of hot row-chunks over a host-RAM
+full table; the chunk prefetch runs inside the engine's host ``unique``
+hook, overlapped with the previous batch's dense stages.
+
+Measured here on a Zipfian id stream (the access law of real
+user/item vocabularies):
+
+  * vocab ≥ 20× the device-resident row budget trains end to end;
+  * hit rate > 90% after the histogram warm-up;
+  * cached step time within 10% of the all-resident baseline
+    (same model, same batches, full table on device).
+
+Writes BENCH_cache_embedding.json (hit rate, swap bytes/step, overhead
+vs all-resident, counters).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, write_bench_json
+from repro.configs import ARCHS, reduced
+from repro.data.freq import stream_id_histogram
+from repro.embedding.cache import CachedShadowedTable
+from repro.models.model_zoo import get_bundle
+from repro.training.engine import GREngine
+
+VOCAB = 65536
+CHUNK_ROWS = 64
+CAPACITY = 48                 # 3072 resident rows → vocab/resident ≈ 21.3×
+ZIPF_A = 1.8
+
+
+def _zipf_ids(rng, shape, vocab):
+    """Zipf(a)-distributed ids with id == popularity rank, rejected into
+    [0, vocab) — hot ids concentrate in the low chunks, as after the
+    frequency reindex production feature stores apply."""
+    out = rng.zipf(ZIPF_A, size=shape) - 1
+    while True:
+        bad = out >= vocab
+        if not bad.any():
+            return out.astype(np.int64)
+        out[bad] = rng.zipf(ZIPF_A, size=int(bad.sum())) - 1
+
+
+def make_batch(i, vocab=VOCAB, shards=2, cap=128, negs=8):
+    rng = np.random.default_rng(10_000 + i)
+    return {
+        "ids": _zipf_ids(rng, (shards, cap), vocab),
+        "labels": _zipf_ids(rng, (shards, cap), vocab),
+        "timestamps": np.cumsum(
+            rng.integers(0, 60, (shards, cap)), 1).astype(np.int32),
+        "offsets": np.tile(np.asarray([0, cap // 2, cap], np.int32),
+                           (shards, 1)),
+        "neg_ids": _zipf_ids(rng, (shards, cap, negs), vocab),
+        "rng": np.zeros((2,), np.uint32),
+    }
+
+
+def _timed_run(engine, steps, repeats=3):
+    """Min-of-repeats wall time of ``engine.run(steps)`` after a compile
+    warm-up (per-step batches replay deterministically)."""
+    engine.run(2)                         # compile every stage jit
+    walls = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        engine.run(steps)
+        walls.append(time.perf_counter() - t0)
+    return min(walls)
+
+
+def run(steps=24):
+    cfg = reduced(ARCHS["hstu-tiny"]).replace(num_negatives=8,
+                                              vocab_size=VOCAB)
+    b = get_bundle(cfg)
+    key = jax.random.PRNGKey(0)
+    lk = dict(neg_mode="fused", neg_segment=64)
+    master = b.init_table(key)
+
+    # all-resident baseline: the full (VOCAB, D) table on device
+    base = GREngine(b, make_batch, loss_kwargs=lk, semi_async=True,
+                    schedule="algorithm1")
+    base_wall = _timed_run(base, steps)
+
+    # cached: 48 resident chunks of 64 rows over the host-RAM table,
+    # warmed from the id histogram of an 8-batch stream prefix
+    cache = CachedShadowedTable(master, capacity_chunks=CAPACITY,
+                                chunk_rows=CHUNK_ROWS)
+    hist = stream_id_histogram((make_batch(i) for i in range(8)), VOCAB)
+    cache.warm_up(hist)
+    eng = GREngine(b, make_batch, loss_kwargs=lk, semi_async=True,
+                   schedule="algorithm1", cache=cache)
+    cached_wall = _timed_run(eng, steps)
+    # hit rate of the timed window only (post-warm-up steady state)
+    s0 = dict(cache.counters())
+    eng.run(steps)
+    s1 = cache.counters()
+    seen = (s1["hits"] - s0["hits"]) + (s1["misses"] - s0["misses"])
+    hit_rate = (s1["hits"] - s0["hits"]) / max(seen, 1)
+    swap_per_step = ((s1["swap_in_bytes"] - s0["swap_in_bytes"])
+                     + (s1["swap_out_bytes"] - s0["swap_out_bytes"])) / steps
+
+    ratio = VOCAB / cache.rows
+    overhead = cached_wall / base_wall - 1.0
+    assert ratio >= 20, ratio
+    assert hit_rate > 0.90, hit_rate
+    emit("cache_embedding.vocab_ratio", 0.0,
+         f"vocab {VOCAB} / resident {cache.rows} rows = {ratio:.1f}x "
+         f"(chunk_rows={CHUNK_ROWS}, capacity={CAPACITY})")
+    emit("cache_embedding.hit_rate", 0.0,
+         f"{100 * hit_rate:.2f}% steady-state (target >90%), "
+         f"{s1['evictions']} evictions, {s1['writebacks']} writebacks")
+    emit("cache_embedding.step_overhead",
+         cached_wall / steps * 1e6,
+         f"cached {cached_wall / steps * 1e3:.2f} ms/step vs all-resident "
+         f"{base_wall / steps * 1e3:.2f} ms/step = "
+         f"{100 * overhead:+.1f}% (target <10%)")
+    kib_in = (s1["swap_in_bytes"] - s0["swap_in_bytes"]) / 1024
+    kib_out = (s1["swap_out_bytes"] - s0["swap_out_bytes"]) / 1024
+    emit("cache_embedding.swap_traffic", 0.0,
+         f"{swap_per_step / 1024:.1f} KiB/step swapped "
+         f"(in {kib_in:.0f} KiB, out {kib_out:.0f} KiB "
+         f"over {steps} steps)")
+    return {
+        "steps": steps, "vocab": VOCAB, "resident_rows": cache.rows,
+        "vocab_ratio": ratio, "chunk_rows": CHUNK_ROWS,
+        "capacity_chunks": CAPACITY, "zipf_a": ZIPF_A,
+        "hit_rate": hit_rate, "swap_bytes_per_step": swap_per_step,
+        "all_resident_ms_per_step": base_wall / steps * 1e3,
+        "cached_ms_per_step": cached_wall / steps * 1e3,
+        "overhead_vs_all_resident": overhead,
+        "counters": dict(s1),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=24)
+    args = ap.parse_args()
+    write_bench_json("cache_embedding", run(args.steps))
+
+
+if __name__ == "__main__":
+    main()

@@ -18,13 +18,19 @@ def run(name, lengths, workers, per_device, overhead_frac):
     token = LB.token_aware_batches(
         lengths, workers, int(np.ceil(sum(lengths) / workers)))
     realloc = LB.global_token_reallocation(lengths, workers)
-    mean_tok = float(np.mean([sum(lengths[i] for i in a) for a in fixed]))
-    oh = overhead_frac * mean_tok
+    # per-device token loads computed ONCE per assignment; both Table 3
+    # statistics reuse them instead of re-walking the assignments
+    loads = {tag: LB.assignment_token_loads(a, lengths)
+             for tag, a in (("fixed_baseline", fixed),
+                            ("token_aware_scaling", token),
+                            ("global_token_realloc", realloc))}
+    oh = overhead_frac * float(loads["fixed_baseline"].mean())
     for tag, a in (("fixed_baseline", fixed),
                    ("token_aware_scaling", token),
                    ("global_token_realloc", realloc)):
-        d = LB.max_token_diff(a, lengths)
-        r = LB.imbalance_ratio(a, lengths, fixed_overhead=oh)
+        d = LB.max_token_diff(a, lengths, loads=loads[tag])
+        r = LB.imbalance_ratio(a, lengths, fixed_overhead=oh,
+                               loads=loads[tag])
         emit(f"table3_load_balance.{name}.{tag}", 0.0,
              f"max_token_diff={d} imbalance_ratio={100 * r:.2f}%")
 

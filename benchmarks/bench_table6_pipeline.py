@@ -13,6 +13,12 @@ Paper (FuXi-large/long): computing 94.3% of wall, not-overlapped comm
   The pipelined run must strictly reduce the not-overlapped comm/host
   fraction versus the serial run while producing bit-identical losses.
 
+Per-stage attribution (the ``stage_s``/``stage_ratio`` JSON keys) reports
+the dense pass as the single stage ``dense_fwd_bwd``: it is one fused
+``jax.value_and_grad`` dispatch, so the executor's dense_fwd/dense_bwd
+slots are a dispatch artifact and splitting them showed a fake 0%
+backward.
+
 Writes BENCH_table6_pipeline.json with both breakdowns.
 """
 from __future__ import annotations
@@ -58,6 +64,9 @@ def run_simulator():
     emit("table6_pipeline.vs_serial", 0.0,
          f"pipeline={wall:.3f}s serial={serial:.3f}s "
          f"speedup={serial / wall:.2f}x")
+    emit("table6_pipeline.sim_stages", 0.0,
+         "  ".join(f"{name} {100 * ratio:.1f}%"
+                   for name, ratio in sorted(r["stage_ratio"].items())))
     return {"steps": n, "wall_s": wall, "serial_s": serial, **r}
 
 
@@ -103,6 +112,12 @@ def run_real(steps=16):
              f"not-overlapped {100 * r['comm_not_overlapped_ratio']:.2f}%  "
              f"free {100 * r['free_ratio']:.1f}%  "
              f"({steps} real steps, {wall / steps * 1e3:.0f} ms/step)")
+        sr = r["stage_ratio"]
+        emit(f"table6_pipeline.real_{sched}_stages", 0.0,
+             "  ".join(f"{name} {100 * sr[name]:.1f}%"
+                       for name in ("dataload", "a2a", "unique", "emb_fwd",
+                                    "dense_fwd_bwd", "emb_bwd")
+                       if name in sr))
 
     assert losses["flat"] == losses["algorithm1"], \
         "pipelined schedule changed the training math"

@@ -24,6 +24,7 @@ _ORDERED = [
     "benchmarks.bench_fig12_quant",
     "benchmarks.bench_table8_logit_sharing",
     "benchmarks.bench_recovery",
+    "benchmarks.bench_cache_embedding",
 ]
 
 

@@ -24,11 +24,29 @@ from typing import List, Sequence, Tuple
 import numpy as np
 
 
+def assignment_token_loads(assignments: Sequence[Sequence[int]],
+                           lengths: Sequence[int]) -> np.ndarray:
+    """Per-device token loads ``tokens_w = Σ_{i∈a_w} lengths[i]``.
+
+    Both Table 3 statistics (:func:`max_token_diff`,
+    :func:`imbalance_ratio`) are functions of this vector alone — compute
+    it once per assignment and pass it via their ``loads=`` parameter
+    instead of letting each statistic re-walk the full assignment."""
+    lens = np.asarray(lengths, np.int64)
+    return np.array([lens[np.asarray(a, np.int64)].sum() if len(a) else 0
+                     for a in assignments], np.int64)
+
+
 def max_token_diff(assignments: Sequence[Sequence[int]],
-                   lengths: Sequence[int]) -> int:
-    """Table 3 metric: max_w(tokens_w) − min_w(tokens_w)."""
-    loads = [int(sum(lengths[i] for i in a)) for a in assignments]
-    return max(loads) - min(loads)
+                   lengths: Sequence[int],
+                   loads: np.ndarray = None) -> int:
+    """Table 3 metric: max_w(tokens_w) − min_w(tokens_w).
+
+    ``loads`` (from :func:`assignment_token_loads`) short-circuits the
+    per-device summation when the caller already has it."""
+    if loads is None:
+        loads = assignment_token_loads(assignments, lengths)
+    return int(np.max(loads) - np.min(loads))
 
 
 def fixed_batches(lengths: Sequence[int], num_devices: int,
@@ -114,13 +132,19 @@ def sample_count_weights(assignments: Sequence[Sequence[int]]) -> np.ndarray:
 def imbalance_ratio(assignments: Sequence[Sequence[int]],
                     lengths: Sequence[int],
                     step_cost_per_token: float = 1.0,
-                    fixed_overhead: float = 0.0) -> float:
+                    fixed_overhead: float = 0.0,
+                    loads: np.ndarray = None) -> float:
     """Load-imbalance delay ratio (Table 3 column 4): idle time of the
     average worker relative to the makespan, under a linear cost model
-    cost_w = overhead + tokens_w · c."""
-    loads = np.array([fixed_overhead + step_cost_per_token *
-                      sum(lengths[i] for i in a) for a in assignments])
-    makespan = loads.max()
+    cost_w = overhead + tokens_w · c.
+
+    ``loads`` (from :func:`assignment_token_loads`) short-circuits the
+    per-device summation when the caller already has it."""
+    if loads is None:
+        loads = assignment_token_loads(assignments, lengths)
+    costs = fixed_overhead + step_cost_per_token * np.asarray(loads,
+                                                             np.float64)
+    makespan = costs.max()
     if makespan <= 0:
         return 0.0
-    return float((makespan - loads.mean()) / makespan)
+    return float((makespan - costs.mean()) / makespan)

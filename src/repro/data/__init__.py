@@ -1,4 +1,6 @@
 from repro.data.synthetic import SyntheticKuaiRand
+from repro.data.freq import (batch_id_histogram, id_frequency_histogram,
+                             stream_id_histogram)
 from repro.data.kuairand import (five_core_filter, leave_one_out,
                                  preprocess_log)
 from repro.data.loader import GRLoader

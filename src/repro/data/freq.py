@@ -1,0 +1,53 @@
+"""Per-batch id-frequency statistics (host-side numpy).
+
+The cache admission/warm-up signal of the host-offloaded embedding cache
+(:class:`repro.embedding.cache.CachedShadowedTable`): a ``(vocab,)``
+occurrence histogram over the id features of one or more jagged batches.
+The per-batch counts themselves come for free from the host ``unique``
+stage (:func:`repro.training.trainer.host_unique_candidates` returns the
+run lengths its sort already produces); these helpers aggregate them
+over a stream prefix for LFU warm-up.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional
+
+import numpy as np
+
+ID_FEATURES = ("ids", "labels", "neg_ids")
+
+
+def id_frequency_histogram(ids, vocab: int,
+                           out: Optional[np.ndarray] = None) -> np.ndarray:
+    """Occurrence counts per id, clamped to ``[0, vocab)`` — the same
+    clip-mode index handling every device gather applies, so the
+    histogram weights exactly the rows training will touch. Accumulates
+    into ``out`` when given."""
+    if out is None:
+        out = np.zeros(vocab, np.int64)
+    a = np.clip(np.asarray(ids, np.int64).reshape(-1), 0, vocab - 1)
+    out += np.bincount(a, minlength=vocab)
+    return out
+
+
+def batch_id_histogram(batch, vocab: int,
+                       out: Optional[np.ndarray] = None) -> np.ndarray:
+    """Histogram over one jagged batch's full candidate set (input ids +
+    labels + negatives) — the id population the train step gathers and
+    the sparse optimizer writes."""
+    if out is None:
+        out = np.zeros(vocab, np.int64)
+    for k in ID_FEATURES:
+        if k in batch:
+            id_frequency_histogram(batch[k], vocab, out=out)
+    return out
+
+
+def stream_id_histogram(batches: Iterable, vocab: int) -> np.ndarray:
+    """Sum :func:`batch_id_histogram` over a stream prefix (cache
+    warm-up: feed the first few batches, then
+    ``cache.warm_up(hist)``)."""
+    out = np.zeros(vocab, np.int64)
+    for b in batches:
+        batch_id_histogram(b, vocab, out=out)
+    return out

@@ -1,2 +1,5 @@
-from repro.embedding.tables import (TableSpec, init_table, lookup,
-                                    lookup_quantized, multi_table_lookup)
+from repro.embedding.cache import (CachedShadowedTable, CacheStats,
+                                   CacheThrash, PrefetchPlan)
+from repro.embedding.tables import (ShadowedTable, TableSpec, init_table,
+                                    lookup, lookup_quantized,
+                                    multi_table_lookup)

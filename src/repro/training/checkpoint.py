@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import msgpack
 import numpy as np
 
+from repro.embedding.cache import CachedShadowedTable
 from repro.embedding.tables import ShadowedTable, rebuild_shadow, strip_shadow
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
@@ -65,6 +66,23 @@ def _strip_shadows(tree: Any) -> Any:
     return jax.tree_util.tree_map(
         lambda t: strip_shadow(t) if _is_shadowed(t) else t,
         tree, is_leaf=_is_shadowed)
+
+
+def _is_cache(x: Any) -> bool:
+    return isinstance(x, CachedShadowedTable)
+
+
+def _materialize_caches(tree: Any) -> Any:
+    """Turn every host-offloaded embedding cache in the tree into the
+    full ``(V, D)`` ShadowedTable it backs: dirty chunks are flushed from
+    the latest published device window into the host master/accum copy,
+    and the shadow rides as the usual 0-row stripped placeholder. A
+    checkpoint therefore stores exactly what an all-resident run would —
+    cached and uncached runs save interchangeably (restore into a cache
+    goes through ``CachedShadowedTable.adopt``)."""
+    return jax.tree_util.tree_map(
+        lambda t: t.materialize() if _is_cache(t) else t,
+        tree, is_leaf=_is_cache)
 
 
 def _rebuild_shadows(tree: Any) -> Any:
@@ -116,7 +134,7 @@ def save(ckpt_dir: str, step: int, tree: Any,
     directories after the new step is durably published.
     """
     os.makedirs(ckpt_dir, exist_ok=True)
-    tree = _strip_shadows(tree)
+    tree = _strip_shadows(_materialize_caches(tree))
     flat, treedef = _leaves_with_paths(tree)
     host = [np.asarray(jax.device_get(x)) for x in flat]
 
@@ -197,7 +215,7 @@ class AsyncCheckpointer:
         # training loop may then mutate its arrays freely. Shadows are
         # stripped before the copy — no point snapshotting derived bytes.
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
-                                 _strip_shadows(tree))
+                                 _strip_shadows(_materialize_caches(tree)))
 
         def work():
             try:

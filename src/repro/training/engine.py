@@ -49,6 +49,7 @@ import numpy as np
 from repro.core.pipeline import (PipelineHooks, STAGES, SixStagePipeline,
                                  StageEvent,
                                  timeline_report as _timeline_report)
+from repro.embedding import cache as EC
 from repro.training import resilience as R
 from repro.training.trainer import (GRTrainState, gr_pending_slots,
                                     gr_train_state, host_unique_candidates,
@@ -111,6 +112,20 @@ class GREngine:
         attn_fn, lookup_fn, ...).
     schedule: "algorithm1" (six-stage pipelined execution) or "flat"
         (same stages, serial per step).
+    cache: optional :class:`repro.embedding.cache.CachedShadowedTable` —
+        the host-offloaded embedding cache. The engine's ``state.table``
+        is then the device-resident hot-chunk *window* and the full
+        vocab lives in host RAM: the ``unique`` hook additionally runs
+        the cache-prefetch path (pin + swap in the batch's missing
+        chunks, translate ids to window slots — on a worker thread, so
+        the H2D chunk transfer overlaps the previous batch's dense
+        stages), ``emb_fwd`` lands the staged chunks with a cheap device
+        splice before its gather, and eviction writes dirty chunks back
+        to host RAM. Per-step hit/miss/evict counters ride in each
+        record's ``"cache"`` entry; checkpoints go through
+        :meth:`full_snapshot` / :meth:`adopt_full_state` (vocab-sized
+        table, stripped shadow). Incompatible with a custom
+        ``lookup_fn``.
     step_callback: optional ``fn(i, record, state)`` invoked after each
         ``emb_bwd`` (logging, checkpointing). ``state`` is always the
         carry-convention snapshot (τ=1 pairs pending, pre-landing table)
@@ -128,11 +143,19 @@ class GREngine:
                  lr_dense: float = 4e-3, lr_sparse: float = 4e-3,
                  semi_async: bool = True, schedule: str = "algorithm1",
                  qdtype=jnp.float16, workers: int = 3,
+                 cache: Optional[EC.CachedShadowedTable] = None,
                  step_callback: Optional[Callable] = None,
                  fault_policy: Optional[R.FaultPolicy] = None,
                  fault_injector: Optional[R.FaultInjector] = None):
         if schedule not in SCHEDULES:
             raise ValueError(f"schedule must be one of {SCHEDULES}")
+        if cache is not None and \
+                dict(loss_kwargs or {}).get("lookup_fn") is not None:
+            raise ValueError("the embedding cache translates ids to window "
+                             "slots on the host; a custom lookup_fn (HSP "
+                             "sparse exchange) expects global ids — the two "
+                             "cannot be combined")
+        self.cache = cache
         self.bundle = bundle
         self.loader = None if callable(data) else data
         self._data_fn = data if callable(data) else None
@@ -190,9 +213,15 @@ class GREngine:
         first = self._batch(0)
         if self.state is None:
             key = jax.random.PRNGKey(self.seed)
+            table = (self.cache.init_window() if self.cache is not None
+                     else self.bundle.init_table(key))
             self.state = gr_train_state(
-                self.bundle.init_dense(key), self.bundle.init_table(key),
+                self.bundle.init_dense(key), table,
                 qdtype=self.qdtype, pending_slots=gr_pending_slots(first))
+        if self.cache is not None:
+            # the run's starting table is the latest landed window — the
+            # reference dirty-chunk writebacks read from
+            self.cache.publish(self.state.table)
         # τ=1 pairs left pending by a previous run (or restored from a
         # checkpoint) land mid-prologue: after emb_fwd(0) — whose input
         # read is one step stale, exactly as the fused step orders it —
@@ -225,6 +254,9 @@ class GREngine:
             table=table,
             pending_ids=jnp.full_like(st.pending_ids, -1),
             pending_rows=jnp.zeros_like(st.pending_rows))
+        if self.cache is not None:
+            self.cache.publish(table)
+            self.cache.release_pending()
 
     def _maybe_land_leftover(self, i: int, stage: str):
         if not self._leftover:
@@ -239,19 +271,57 @@ class GREngine:
         return self._batch(i)
 
     def _hk_a2a(self, i: int, nb):
-        # feature exchange: the host→device transfer of the jagged batch
-        dev = {k: jnp.asarray(v) for k, v in nb.items() if k != "weights"}
+        # feature exchange: the host→device transfer of the jagged batch.
+        # Under the cache the id features stay on host — the unique hook
+        # uploads them after the id→slot translation.
+        skip = (("weights",) if self.cache is None
+                else ("weights", "ids", "labels", "neg_ids"))
+        dev = {k: jnp.asarray(v) for k, v in nb.items() if k not in skip}
         jax.block_until_ready(dev)
         return {"np": nb, "dev": dev}
 
     def _hk_unique(self, i: int, art):
+        if self.cache is not None:
+            return self._cache_prefetch(i, art)
         vocab = self.bundle.cfg.vocab_size
         if self.state is not None:
             vocab = self.state.table.master.shape[0]
-        s, first = host_unique_candidates(art["np"], vocab)
+        s, first, _ = host_unique_candidates(art["np"], vocab)
         return {**art, "cand": (jnp.asarray(s), jnp.asarray(first))}
 
+    def _cache_prefetch(self, i: int, art):
+        """Cache path of the unique hook (worker thread): candidate dedup
+        feeds the chunk manager — pin this batch's chunks, stage the
+        missing ones host→device (the transfer dispatches here, under the
+        previous batch's dense stages), then translate the batch's id
+        features and the candidate sort into window-slot space. The
+        translated candidate list re-sorts bit-identically (translation
+        is a per-chunk-monotonic bijection on the candidate multiset, so
+        run structure is preserved) and the device stages consume it
+        unchanged."""
+        C, nb = self.cache, art["np"]
+        s, first, counts = host_unique_candidates(nb, C.vocab)
+        plan, cstats = C.prepare(i, s[first], counts[first])
+        dev = dict(art["dev"])
+        for k in ("ids", "labels", "neg_ids"):
+            dev[k] = jnp.asarray(C.translate(np.asarray(nb[k])))
+        ts = np.sort(C.translate(s))
+        tf = np.concatenate([np.ones((1,), bool), ts[1:] != ts[:-1]])
+        cand = (jnp.asarray(ts), jnp.asarray(tf))
+        jax.block_until_ready(dev)
+        return {**art, "dev": dev, "cand": cand, "plan": plan,
+                "cache": cstats}
+
     def _hk_emb_fwd(self, i: int, art):
+        if self.cache is not None:
+            plan = art.get("plan")
+            if plan is not None:
+                # land the prefetched chunks: a cheap async-dispatched
+                # chunk-slot scatter, disjoint from every in-flight
+                # batch's rows (those chunks are pinned)
+                self.state = self.state._replace(
+                    table=self.cache.splice(self.state.table, plan))
+            self.cache.publish(self.state.table)
         self._maybe_land_leftover(i, "emb_fwd")
         st = self.state
         if self._x_mode:
@@ -284,6 +354,9 @@ class GREngine:
         loss = float(full["dout"].loss)   # realize the dispatched fwd+bwd
         tokens = int(np.asarray(full["np"]["offsets"])[:, -1].sum())
         rec = {"step": i, "loss": loss, "tokens": tokens}
+        if self.cache is not None:
+            # per-step cache counters ride the record into the timeline
+            rec["cache"] = full.get("cache")
         pol = self._policy
         if pol is not None and pol.guard_nonfinite:
             bad = not np.isfinite(loss)
@@ -312,11 +385,14 @@ class GREngine:
             # non-finite guard dropped this batch: no optimizer step, no
             # pairs — the state is untouched and the current state is its
             # own carry-convention snapshot
+            if self.cache is not None:
+                self.cache.release(i, dirty=False)
             self._bcache[i] = None
             if self.step_callback:
                 self.step_callback(i, rec, st)
             return rec
         cand_s, cand_f = full["cand"]
+        release_dirty = False   # unpin AFTER the callback (see below)
         if self.semi_async:
             # checkpoints/callbacks always see the carry-convention
             # snapshot (pending pairs + pre-landing table — what the
@@ -330,6 +406,10 @@ class GREngine:
                     full["dev"], cand_s, cand_f, apply_sparse=False)
                 self.state = snapshot = GRTrainState(
                     dense, opt, st.table, p_ids, p_rows, st.step + 1)
+                if self.cache is not None:
+                    # pairs pending: the batch's chunks stay pinned until
+                    # the deferred landing marks them dirty
+                    self.cache.defer_release(i)
             else:
                 # pipelined steady state: land now — dense_fwd(i+1) is
                 # the next statement and must see the fresh rows; the
@@ -342,6 +422,9 @@ class GREngine:
                 self.state = GRTrainState(
                     dense, opt, table, jnp.full_like(p_ids, -1),
                     jnp.zeros_like(p_rows), st.step + 1)
+                if self.cache is not None:
+                    self.cache.publish(table)
+                    release_dirty = True
         else:
             dense, opt, table, p_ids, p_rows = self._j_emb_bwd(
                 st.dense, st.dense_opt, st.table, full["dout"],
@@ -349,13 +432,56 @@ class GREngine:
             self.state = snapshot = GRTrainState(
                 dense, opt, table, jnp.full_like(p_ids, -1),
                 jnp.zeros_like(p_rows), st.step + 1)
+            if self.cache is not None:
+                self.cache.publish(table)
+                release_dirty = True
         self._bcache[i] = None            # free the consumed numpy batch
         if self.step_callback:
             self.step_callback(i, rec, snapshot)
+        if self.cache is not None and release_dirty:
+            # unpin only now: the callback may checkpoint the pre-landing
+            # snapshot, and a concurrent worker-thread prepare() must not
+            # evict+write back a chunk this landing just dirtied (the host
+            # copy would turn post-landing while the snapshot still
+            # carries the pairs — a double-apply on restore)
+            self.cache.release(i, dirty=True)
         return rec
 
     def _make_hooks(self) -> PipelineHooks:
         return PipelineHooks(**self._stage_fns)
+
+    # -- cache ↔ full-table state conversion --------------------------------
+    def full_snapshot(self, state: Optional[GRTrainState] = None
+                      ) -> GRTrainState:
+        """The vocab-sized carry-convention state of a cached run: dirty
+        chunks are flushed from the given window snapshot into a full
+        ``(V, D)`` master/accum (shadow stays a stripped placeholder) and
+        the τ=1 pending ids are globalized. No-op without a cache — this
+        is the one state form checkpoints store, so cached and uncached
+        runs save interchangeably."""
+        st = state if state is not None else self.state
+        if self.cache is None or st is None:
+            return st
+        table = self.cache.materialize(st.table)
+        p_ids, p_rows = self.cache.globalize_pending_pairs(
+            np.asarray(st.pending_ids), np.asarray(st.pending_rows))
+        return st._replace(table=table, pending_ids=jnp.asarray(p_ids),
+                           pending_rows=jnp.asarray(p_rows))
+
+    def adopt_full_state(self, full: GRTrainState) -> GRTrainState:
+        """Load a vocab-sized (restored) state into the cache: host
+        master/accum are overwritten, residency is rebuilt from the
+        accumulated frequency counters (pending-pair chunks force-
+        admitted and pinned), and ``engine.state`` becomes the window
+        form with slot-space pending ids."""
+        if self.cache is None:
+            self.state = full
+            return full
+        window, p_slots = self.cache.adopt(full.table,
+                                           np.asarray(full.pending_ids))
+        self.state = full._replace(table=window,
+                                   pending_ids=jnp.asarray(p_slots))
+        return self.state
 
     # -- run ---------------------------------------------------------------
     def run(self, steps: int) -> List[Dict[str, Any]]:
@@ -505,7 +631,12 @@ class GREngine:
         records: Dict[int, Dict[str, Any]] = {}
         saver = (CKPT.AsyncCheckpointer(ckpt_dir, keep_last_n=keep_last_n)
                  if async_save else None)
-        initial = self.state           # replay-from-scratch anchor
+        # replay-from-scratch anchor; cached runs anchor the *full* state
+        # (host rows mutate under writeback, so the window alone cannot
+        # reconstruct step 0)
+        initial = (self.full_snapshot(self.state)
+                   if self.cache is not None and self.state is not None
+                   else self.state)
 
         def on_step(i: int, rec: Dict[str, Any], snapshot) -> None:
             g = self._resume_base + i
@@ -516,7 +647,8 @@ class GREngine:
             done = g + 1
             if (ckpt_every and done % ckpt_every == 0) or \
                     (final_save and done == steps):
-                self._write_ckpt(saver, ckpt_dir, done, snapshot,
+                self._write_ckpt(saver, ckpt_dir, done,
+                                 self.full_snapshot(snapshot),
                                  keep_last_n)
 
         self.step_callback = on_step
@@ -539,14 +671,23 @@ class GREngine:
                     if len(self.recoveries) >= pol.max_recoveries:
                         raise
                     failed = max(records, default=base - 1) + 1
+                    if self.cache is not None:
+                        self.cache.reset_pins()   # the crashed run's pins
                     try:
-                        self.state, used = CKPT.restore_with_step(
-                            ckpt_dir, self.state)
+                        tmpl = self.full_snapshot(self.state)
+                        full, used = CKPT.restore_with_step(ckpt_dir, tmpl)
+                        self.adopt_full_state(full)
                     except (FileNotFoundError, CKPT.CheckpointCorrupt):
                         # no intact checkpoint yet: replay from scratch —
                         # the initial state (or its seed-deterministic
                         # re-init when the run built it) anchors step 0
-                        self.state, used = initial, base0
+                        if initial is None and self.cache is not None:
+                            raise   # cache host rows already mutated
+                        if self.cache is not None:
+                            self.adopt_full_state(initial)
+                        else:
+                            self.state = initial
+                        used = base0
                     for g in [g for g in records if g >= used]:
                         del records[g]
                     base = used

@@ -162,6 +162,13 @@ def host_unique_candidates(batch, vocab: int):
     :func:`repro.core.hsp.unique_accumulate` runs per-shard before the
     sparse gradient exchange; here it covers the whole candidate list of
     a batch (input ids + labels + negatives).
+
+    Returns ``(sorted, first, counts)``: the sort's run boundaries give
+    per-id multiplicities for free, so ``counts`` holds each run's
+    length at its first position (0 elsewhere) — ``sorted[first]`` are
+    the unique ids and ``counts[first]`` their per-batch frequencies,
+    the admission/eviction weight of the host-offloaded embedding cache
+    (:class:`repro.embedding.cache.CachedShadowedTable`).
     """
     cand = np.concatenate([
         np.asarray(batch["ids"]).reshape(-1),
@@ -170,7 +177,10 @@ def host_unique_candidates(batch, vocab: int):
     cand = np.clip(cand, 0, vocab - 1)
     s = np.sort(cand)
     first = np.concatenate([np.ones((1,), bool), s[1:] != s[:-1]])
-    return s, first
+    starts = np.flatnonzero(first)
+    counts = np.zeros(s.shape, np.int64)
+    counts[starts] = np.diff(np.append(starts, s.size))
+    return s, first, counts
 
 
 def _table_grad_pairs(gt: jax.Array, batch: Batch, vocab: int,
@@ -262,6 +272,16 @@ def make_gr_stages(loss_fn: Callable[..., jax.Array], *,
     None, the input lookup stays inside the dense stage, differentiated
     against the stale master via ``input_table=`` (the pre-staging
     behaviour, and the only mode that supports custom ``lookup_fn``s).
+
+    Cache-slot transparency: every stage is shape-generic over
+    ``table.master.shape[0]`` and ids are used only as gather/scatter
+    row indices, so the stages run unchanged on a
+    :class:`repro.embedding.cache.CachedShadowedTable` window — the
+    engine translates the batch's ids (and the precomputed candidate
+    sort) from global id space to window-slot space on the host, and
+    emb_fwd / the fused neg-kernel gather / the row-sparse AdaGrad in
+    emb_bwd all operate on cache slots; writeback to the host-resident
+    full table is chunk-sparse and deferred to eviction.
     """
     x_mode = semi_async and input_gather is not None
 
