@@ -129,11 +129,25 @@ def run(steps=24):
          f"{swap_per_step / 1024:.1f} KiB/step swapped "
          f"(in {kib_in:.0f} KiB, out {kib_out:.0f} KiB "
          f"over {steps} steps)")
+    # row-sparse writeback: rows actually copied D2H vs. what chunk-
+    # granular eviction would have copied (the sparse-touch win)
+    wb_dirty = s1["writeback_rows_dirty"] - s0["writeback_rows_dirty"]
+    wb_total = s1["writeback_rows_total"] - s0["writeback_rows_total"]
+    row_bytes = 2 * cache.dim * 4          # master + accum, fp32
+    emit("cache_embedding.writeback_rows", 0.0,
+         f"{wb_dirty}/{wb_total} rows written back "
+         f"({100 * wb_dirty / max(wb_total, 1):.1f}% of chunk-granular; "
+         f"saved {(wb_total - wb_dirty) * row_bytes / 1024:.0f} KiB "
+         f"over {steps} steps)")
     return {
         "steps": steps, "vocab": VOCAB, "resident_rows": cache.rows,
         "vocab_ratio": ratio, "chunk_rows": CHUNK_ROWS,
         "capacity_chunks": CAPACITY, "zipf_a": ZIPF_A,
         "hit_rate": hit_rate, "swap_bytes_per_step": swap_per_step,
+        "writeback_rows_dirty": wb_dirty,
+        "writeback_rows_total": wb_total,
+        "writeback_row_fraction": wb_dirty / max(wb_total, 1),
+        "writeback_bytes_saved": (wb_total - wb_dirty) * row_bytes,
         "all_resident_ms_per_step": base_wall / steps * 1e3,
         "cached_ms_per_step": cached_wall / steps * 1e3,
         "overhead_vs_all_resident": overhead,

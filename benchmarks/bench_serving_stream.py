@@ -1,0 +1,295 @@
+"""Open-loop sustained-traffic benchmark for the continuous-batching
+serving engine (``repro.serving.StreamingRecallEngine``).
+
+Three sections, one trained tiny model (reused from bench_serving):
+
+  1. **Trace parity** — an identical 4-round incremental trace (cold
+     seeds, warm appends, ring wraparounds) through the PR-4 micro-batch
+     ``RecallEngine`` and the slot-buffer streaming engine must produce
+     bit-identical top-k ids and scores (the acceptance gate: same
+     lookup, same blocked attention order, same blocked top-k — prefix
+     reuse included).
+  2. **Closed-loop baseline** — bench_serving's round structure
+     (synchronous rounds over the user population, ~half shipping 1-3 new
+     events, the rest pure cache hits) on the micro-batch engine: the
+     "current bench_serving QPS" the streaming target is measured
+     against. Identical session lengths and traffic mix as the sweep.
+  3. **Open-loop sweep** — Poisson and bursty arrival processes at a
+     ladder of offered-QPS multiples of the baseline, replayed in real
+     time against one persistent streaming engine whose bucket ladder was
+     precompiled by ``warmup()`` (a mid-tick XLA compile is a multi-
+     hundred-ms admission-control event, so a serving process compiles
+     its ladder before taking traffic). Per level: sustained throughput,
+     p50/p99 latency, shed rate, tick occupancy, and the recompile count
+     (which the bounded bucket ladder must keep at ~0 in steady state).
+
+Sessions are seeded at half the ring capacity and re-seeded per level:
+the warm path's regime is sessions *below* the ring cap — a full ring
+truncates on every append and legitimately falls back to the cold full
+re-encode (exercised by the parity trace, reported in the encode mix).
+
+Under load the engine's throughput is coalescing-driven: every request
+waiting on a slot is answered by that slot's next encode, so a deeper
+queue raises requests-per-tick instead of collapsing — the continuous-
+batching win this benchmark exists to demonstrate.
+
+Passes when some level sustains ≥ 10× the closed-loop baseline QPS with
+p99 under ``P99_BOUND_MS`` and a sub-1% shed rate.
+
+Writes BENCH_serving_stream.json.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving_stream
+"""
+import time
+
+import numpy as np
+
+from benchmarks.bench_serving import _train_tiny
+from benchmarks.common import emit, write_bench_json
+from repro.serving import RecallEngine, StreamingRecallEngine
+
+K = 100
+USERS = 48
+SESSION_LEN = 64             # seeded session length: half the S=128 ring
+P_NEW = 0.5                  # per request: odds of carrying 1-3 new events
+BASE_ROUNDS = 6
+OFFERED_MULTIPLES = (2.0, 5.0, 10.0, 20.0, 40.0)
+P99_BOUND_MS = 250.0
+SHED_BOUND = 0.01
+
+
+def _micro_engine(cfg, state):
+    return RecallEngine(cfg, state.dense, state.table,
+                        num_shards=2, users_per_shard=8,
+                        tokens_per_shard=512, k=K,
+                        retrieval_block=64, max_delay_ms=0.0)
+
+
+def _stream_engine(cfg, state, max_users, **kw):
+    kw.setdefault("max_rows_per_tick", 32)
+    return StreamingRecallEngine(cfg, state.dense, state.table,
+                                 max_users=max_users, k=K,
+                                 retrieval_block=64, **kw)
+
+
+def _mixed_round(rng, users, clock, n_items):
+    """One round of requests: ~P_NEW of users ship 1-3 new events, the
+    rest ask for recommendations on unchanged history (cache hits)."""
+    reqs = []
+    for u in users:
+        if rng.random() < P_NEW:
+            n_new = int(rng.integers(1, 4))
+            ids = rng.integers(0, n_items, n_new)
+            ts = clock[u] + np.arange(1, n_new + 1)
+            clock[u] = int(ts[-1])
+            reqs.append((u, ids, ts))
+        else:
+            reqs.append((u, [], []))
+    return reqs
+
+
+def _assert_parity(cfg, state, seqs, n_items, users):
+    """Identical trace → bit-identical top-k between the two engines.
+    Full-length histories on purpose: ring wraparounds force the cold
+    fallback alongside warm appends."""
+    base = _micro_engine(cfg, state)
+    eng = _stream_engine(cfg, state, max_users=len(users) + 8)
+    rng = np.random.default_rng(11)
+    clock = {u: int(seqs[u][1][-1]) for u in users}
+    rounds = [[(u, *seqs[u]) for u in users]]
+    rounds += [_mixed_round(rng, users, clock, n_items) for _ in range(3)]
+    for reqs in rounds:
+        br = {r.user: r for r in base.serve(reqs)}
+        sr = {r.user: r for r in eng.serve(reqs)}
+        for u in users:
+            if not (np.array_equal(br[u].item_ids, sr[u].item_ids)
+                    and np.array_equal(br[u].scores, sr[u].scores)):
+                raise RuntimeError(
+                    f"parity: user {u} top-k diverged between the "
+                    f"micro-batch and streaming engines")
+    return eng.stats()["encode"]
+
+
+def _closed_loop_qps(cfg, state, sessions, n_items, users):
+    """bench_serving's measured regime: synchronous rounds of mixed
+    hit/delta requests on the micro-batch engine."""
+    eng = _micro_engine(cfg, state)
+    rng = np.random.default_rng(1)
+    clock = {u: int(sessions[u][1][-1]) for u in users}
+    eng.serve([(u, *sessions[u]) for u in users])        # cold + compile
+    eng.serve(_mixed_round(rng, users, clock, n_items))  # warm both paths
+    served = 0
+    t0 = time.monotonic()
+    for _ in range(BASE_ROUNDS):
+        served += len(eng.serve(_mixed_round(rng, users, clock, n_items)))
+    return served / (time.monotonic() - t0)
+
+
+def _arrivals(rng, n, qps, process):
+    """Relative arrival times (seconds) for ``n`` requests at offered
+    ``qps``: exponential gaps (poisson) or size-16 batches (bursty)."""
+    if process == "poisson":
+        return np.cumsum(rng.exponential(1.0 / qps, n))
+    burst = 16
+    return np.repeat(np.arange((n + burst - 1) // burst) * (burst / qps),
+                     burst)[:n]
+
+
+def _replay(eng, trace):
+    """Real-time open-loop replay: requests are submitted at their
+    scheduled arrival whether or not the engine has kept up, then the
+    engine ticks until drained."""
+    i = 0
+    t0 = time.monotonic()
+    while i < len(trace) or eng.pending:
+        now = time.monotonic() - t0
+        while i < len(trace) and trace[i][0] <= now:
+            _, u, ids, ts = trace[i]
+            eng.submit(u, ids, ts)
+            i += 1
+        if eng.pending:
+            eng.tick()
+        elif i < len(trace):
+            time.sleep(min(1e-3, max(trace[i][0] - now, 0.0)))
+    return time.monotonic() - t0
+
+
+def _reseed(eng, sessions, users, clock):
+    """Fresh sessions for the next level: release every slot and re-seed
+    at SESSION_LEN (one closed-loop cold round; not part of any timed
+    window)."""
+    for u in users:
+        if eng.buffer.slot_of(u) is not None:
+            eng.buffer.release(u)
+    eng.serve([(u, *sessions[u]) for u in users])
+    for u in users:
+        clock[u] = int(sessions[u][1][-1])
+
+
+def _run_level(eng, rng, users, clock, n_items, qps, process):
+    n_reqs = int(min(2400, max(600, qps)))
+    rid_floor = eng.sched._next_rid
+    shed0 = {k: v for k, v in eng.sched.outcomes.items() if k != "accepted"}
+    compiles0 = eng.compile_cache.compiles
+    ticks0, rows0 = eng.sched.ticks, eng.sched._row_used
+
+    order = rng.permutation(
+        np.repeat(users, n_reqs // len(users) + 1))[:n_reqs]
+    when = _arrivals(rng, n_reqs, qps, process)
+    trace = []
+    for t, u in zip(when, order):
+        reqs = _mixed_round(rng, [int(u)], clock, n_items)
+        trace.append((float(t),) + tuple(reqs[0]))
+    wall = _replay(eng, trace)
+
+    recs = [r for rid, r in eng.sched.records.items() if rid >= rid_floor
+            and np.isfinite(r["t_done"])]
+    lat = np.array([r["t_done"] - r["t_enqueue"] for r in recs])
+    shed = sum(v - shed0[k] for k, v in eng.sched.outcomes.items()
+               if k != "accepted")
+    ticks = eng.sched.ticks - ticks0
+    return {
+        "process": process,
+        "offered_qps": float(qps),
+        "requests": n_reqs,
+        "completed": len(recs),
+        "shed": int(shed),
+        "shed_rate": shed / n_reqs,
+        "sustained_qps": len(recs) / wall,
+        "p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "ticks": int(ticks),
+        "mean_rows_per_tick": (eng.sched._row_used - rows0) / max(ticks, 1),
+        "recompiles": eng.compile_cache.compiles - compiles0,
+    }
+
+
+def main():
+    cfg, state, seqs, test, n_items = _train_tiny()
+    users = list(seqs)[:USERS]
+    sessions = {u: (seqs[u][0][-SESSION_LEN:], seqs[u][1][-SESSION_LEN:])
+                for u in users}
+
+    enc = _assert_parity(cfg, state, seqs, n_items, users)
+    emit("serving_stream.parity", 0.0,
+         f"bit-identical top-k on identical traces "
+         f"(warm_rows={enc['warm_rows']}, cold_rows={enc['cold_rows']})")
+
+    closed_qps = _closed_loop_qps(cfg, state, sessions, n_items, users)
+    emit("serving_stream.closed_loop", 1e6 / max(closed_qps, 1e-9),
+         f"micro-batch baseline {closed_qps:.0f} qps "
+         f"({BASE_ROUNDS} rounds of {USERS})")
+
+    # one persistent engine across the whole sweep — its compile cache,
+    # slot buffer, and admission counters carry over exactly as a
+    # long-running serving process's would. max_rows_per_tick covers the
+    # population, so a queued slot never waits more than one tick;
+    # queue_limit is the admission-control bound the overloaded levels
+    # shed against.
+    eng = _stream_engine(cfg, state, max_users=USERS + 16,
+                         max_rows_per_tick=USERS, queue_limit=4096)
+    t0 = time.monotonic()
+    warmup_compiles = eng.warmup(q_caps=(2, 4, 8, 16))
+    warmup_s = time.monotonic() - t0
+    emit("serving_stream.warmup", warmup_s * 1e6,
+         f"{warmup_compiles} ladder programs precompiled in {warmup_s:.0f}s")
+    rng = np.random.default_rng(2)
+    clock = {}
+    _reseed(eng, sessions, users, clock)
+    eng.serve(_mixed_round(rng, users, clock, n_items))
+
+    levels = []
+    for process in ("poisson", "bursty"):
+        for mult in OFFERED_MULTIPLES:
+            _reseed(eng, sessions, users, clock)
+            lv = _run_level(eng, rng, users, clock, n_items,
+                            mult * closed_qps, process)
+            lv["offered_multiple"] = mult
+            levels.append(lv)
+            emit(f"serving_stream.{process}_{mult:g}x",
+                 1e6 / max(lv["sustained_qps"], 1e-9),
+                 f"offered {lv['offered_qps']:.0f} qps → sustained "
+                 f"{lv['sustained_qps']:.0f}, p99 {lv['p99_ms']:.1f} ms, "
+                 f"shed {100 * lv['shed_rate']:.2f}%, "
+                 f"recompiles {lv['recompiles']}")
+
+    good = [lv for lv in levels
+            if lv["sustained_qps"] >= 10.0 * closed_qps
+            and lv["p99_ms"] <= P99_BOUND_MS
+            and lv["shed_rate"] <= SHED_BOUND]
+    best = max(levels, key=lambda lv: lv["sustained_qps"])
+    speedup = best["sustained_qps"] / closed_qps
+    emit("serving_stream.speedup", 0.0,
+         f"best sustained {best['sustained_qps']:.0f} qps = "
+         f"{speedup:.1f}x closed-loop "
+         f"(target >=10x at p99<={P99_BOUND_MS:.0f}ms: "
+         f"{'pass' if good else 'FAIL'})")
+
+    st = eng.stats()
+    write_bench_json("serving_stream", {
+        "users": USERS, "k": K, "p_new": P_NEW, "vocab": n_items,
+        "session_len": SESSION_LEN,
+        "closed_loop_qps": closed_qps,
+        "levels": levels,
+        "best_sustained_qps": best["sustained_qps"],
+        "speedup_vs_closed_loop": speedup,
+        "speedup_pass": bool(good),
+        "p99_bound_ms": P99_BOUND_MS,
+        "warmup_compiles": warmup_compiles,
+        "warmup_s": warmup_s,
+        "sweep_recompiles": sum(lv["recompiles"] for lv in levels),
+        "admission": st["admission"],
+        "occupancy": st["occupancy"],
+        "encode": st["encode"],
+    })
+    if not good:
+        # RuntimeError (not SystemExit): run.py catches Exception per
+        # module and must keep its continue-and-report contract
+        raise RuntimeError(
+            f"no sweep level sustained 10x the closed-loop baseline "
+            f"({closed_qps:.0f} qps) at p99<={P99_BOUND_MS}ms with "
+            f"shed<={SHED_BOUND:.0%}")
+
+
+if __name__ == "__main__":
+    main()

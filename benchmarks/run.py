@@ -25,6 +25,8 @@ _ORDERED = [
     "benchmarks.bench_table8_logit_sharing",
     "benchmarks.bench_recovery",
     "benchmarks.bench_cache_embedding",
+    "benchmarks.bench_serving",
+    "benchmarks.bench_serving_stream",
 ]
 
 

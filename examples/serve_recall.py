@@ -1,12 +1,16 @@
-"""Scenario: batched recall serving through the ``repro.serving`` engine —
-retrieve top-k items for streaming user requests with a trained GR model.
+"""Scenario: continuous-batching recall serving through ``repro.serving``
+— retrieve top-k items for streaming user requests with a trained GR
+model.
 
-The example quick-trains a tiny model, then drives the serving subsystem
-as a client would: a cold round (every user encodes), a warm round of
-unchanged users (pure cache hits — no forward runs), and an incremental
-round where users ship only their new events (ring-buffer append +
-re-encode). Retrieval runs the sharded blocked top-k over the FP16 shadow
-table.
+The example quick-trains a tiny model, then drives the
+``StreamingRecallEngine`` as a client would: a cold round (every session
+seeds a device-resident slot and fully encodes), a warm round of
+unchanged users (pure cache hits — nothing touches the device), an
+incremental round where users ship only their new events (the warm path
+encodes just the appended window against each slot's cached K/V prefix),
+and finally a short open-loop burst through ``submit``/``tick`` showing
+typed admission outcomes. Retrieval ranks straight from the slot-resident
+embeddings via the sharded blocked top-k over the FP16 shadow table.
 
     PYTHONPATH=src python examples/serve_recall.py
 """
@@ -25,7 +29,7 @@ from repro.data.kuairand import preprocess_log
 from repro.data.loader import GRLoader
 from repro.data.synthetic import SyntheticKuaiRand
 from repro.models.model_zoo import get_bundle
-from repro.serving import RecallEngine
+from repro.serving import StreamingRecallEngine
 from repro.training.trainer import gr_train_state, make_gr_train_step
 
 
@@ -50,43 +54,60 @@ def main():
         state, m = step(state, nb)
     print(f"trained: loss {float(m['loss']):.4f}")
 
-    # the serving subsystem: scheduler + user-state cache + shadow top-k
-    engine = RecallEngine(cfg, state.dense, state.table,
-                          num_shards=4, users_per_shard=8,
-                          tokens_per_shard=256, k=100,
-                          retrieval_block=1024)
+    # the serving subsystem: persistent slot buffer + continuous scheduler
+    # + shadow top-k, ranked straight from the device embedding rows
+    engine = StreamingRecallEngine(cfg, state.dense, state.table,
+                                   max_users=48, k=100,
+                                   retrieval_block=1024,
+                                   max_rows_per_tick=32)
     users = list(seqs)[:32]
 
     def hr(results):
         return sum(int(test[r.user] in r.item_ids) for r in results) \
             / len(results)
 
-    # round 1: cold — every history encodes (includes compile time)
+    # round 1: cold — every session seeds a slot and fully encodes,
+    # populating the per-layer K/V prefix caches (includes compile time)
     t0 = time.time()
     cold = engine.serve([(u, *seqs[u]) for u in users])
     print(f"cold:  {len(cold)} requests in {(time.time()-t0)*1e3:.1f} ms, "
           f"HR@100 = {hr(cold):.3f}")
 
-    # round 2: unchanged users — pure cache hits, no forward at all
+    # round 2: unchanged users — version-current cached top-k, nothing
+    # runs on the device at all
     t0 = time.time()
     warm = engine.serve([(u, [], []) for u in users])
     print(f"warm:  {len(warm)} requests in {(time.time()-t0)*1e3:.1f} ms, "
           f"HR@100 = {hr(warm):.3f} "
           f"(hits {sum(r.cache_hit for r in warm)}/{len(warm)})")
 
-    # round 3: incremental — clients ship only genuinely new events (a
-    # fresh interaction after the logged history); the engine appends to
-    # the cached ring buffer and re-encodes only these changed users
+    # round 3: incremental — clients ship only genuinely new events; the
+    # warm path encodes just the appended window against each slot's
+    # cached prefix (bit-identical to a full re-encode), then re-ranks
     rng = np.random.default_rng(0)
     incr_reqs = [(u, rng.integers(0, n_items, 1),
                   seqs[u][1][-1:] + 60) for u in users]
     t0 = time.time()
     incr = engine.serve(incr_reqs)
     print(f"incr:  {len(incr)} requests in {(time.time()-t0)*1e3:.1f} ms, "
-          f"HR@100 = {hr(incr):.3f}")
+          f"HR@100 = {hr(incr):.3f} "
+          f"(warm rows {engine.warm_rows}, cold rows {engine.cold_rows})")
+
+    # open-loop: submit admits without blocking (typed outcomes), tick
+    # forms one budget-bounded batch — same-user bursts coalesce into a
+    # single encode that answers every waiting request
+    admitted = [engine.submit(users[0], [int(rng.integers(n_items))],
+                              [int(seqs[users[0]][1][-1]) + 120 + i])
+                for i in range(3)]
+    out = engine.tick()
+    print(f"burst: {len(admitted)} submits "
+          f"({[a.outcome for a in admitted]}) → {len(out)} results "
+          f"from one tick")
 
     s = engine.stats()
-    print(f"cache hit rate {s['cache']['hit_rate']:.2f}, "
+    print(f"occupancy {s['occupancy']['slots_used']}/"
+          f"{s['occupancy']['max_users']} slots, "
+          f"compiled programs {s['compile']['compiles']}, "
           f"retrieval table dtype {s['retrieval_table_dtype']}, "
           f"p50 latency {s['latency']['p50_s']*1e3:.1f} ms over "
           f"{s['latency']['count']} requests")

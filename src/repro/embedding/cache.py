@@ -30,10 +30,16 @@ Chunk manager (all host-side numpy, one lock):
     :meth:`release_pending`), so a swap can never pull a row out from
     under an in-flight gather or a not-yet-landed sparse update.
   * Row-sparse AdaGrad is the only mutation and it touches gathered rows
-    only, so writeback is naturally chunk-sparse and deferred to
-    eviction: a released batch marks its chunks dirty; evicting a dirty
-    chunk copies its window rows back to host RAM first
-    (`eviction never drops a dirty chunk` is property-tested).
+    only, so writeback is naturally *row*-sparse and deferred to
+    eviction: a released batch marks its chunks dirty and records which
+    rows it actually touched (the unique candidate ids from
+    :meth:`prepare`); evicting a dirty chunk copies only its touched
+    window rows back to host RAM — untouched rows are bitwise equal to
+    the host copy already, so skipping them changes writeback *bytes*,
+    never the master state (`eviction never drops a dirty chunk` and the
+    sparse-touch byte reduction are both property-tested). A chunk dirty
+    without a recorded row set (e.g. after crash recovery) conservatively
+    writes back whole.
 
 Overlap: :meth:`prepare` runs inside the engine's host ``unique`` hook on
 a worker thread — it stages the missing chunks' host rows as device
@@ -73,6 +79,10 @@ class CacheStats:
     swap_in_bytes: int = 0
     swap_out_bytes: int = 0
     warmup_bytes: int = 0
+    # row-sparse writeback accounting: rows actually copied D2H vs. the
+    # rows a chunk-granular writeback would have copied
+    writeback_rows_dirty: int = 0
+    writeback_rows_total: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -129,10 +139,15 @@ class CachedShadowedTable:
         self.slot_chunk = np.full(self.capacity_chunks, -1, np.int64)
         self.freq = np.zeros(self.num_chunks, np.int64)
         self.dirty = np.zeros(self.num_chunks, bool)
+        # chunk id → (chunk_rows,) bool mask of touched rows; present only
+        # for dirty chunks with a recorded touch set
+        self.dirty_rows: Dict[int, np.ndarray] = {}
         self.pins = np.zeros(self.num_chunks, np.int64)
         self.stats = CacheStats()
         self._batch_chunks: Dict[int, np.ndarray] = {}
+        self._batch_rows: Dict[int, np.ndarray] = {}
         self._pending_chunks: Optional[np.ndarray] = None
+        self._pending_rows: Optional[np.ndarray] = None
         self._window_ref: Optional[ET.ShadowedTable] = None
         self._lock = threading.Lock()
 
@@ -299,6 +314,7 @@ class CachedShadowedTable:
             prev = self._batch_chunks.pop(batch, None)
             if prev is not None:            # stage retry: re-prepare
                 self.pins[prev] -= 1
+                self._batch_rows.pop(batch, None)
             self.freq[chunks] += weight
             resident = self.chunk_slot[chunks] >= 0
             hits = int(weight[resident].sum())
@@ -312,6 +328,9 @@ class CachedShadowedTable:
             # be eviction victims for its own missing chunks
             self.pins[chunks] += 1
             self._batch_chunks[batch] = chunks
+            # the rows the sparse update will touch — release() turns this
+            # into the per-row dirty record the eviction writeback reads
+            self._batch_rows[batch] = np.unique(uids)
             if missing.size:
                 out0 = self.stats.swap_out_bytes
                 try:
@@ -374,13 +393,23 @@ class CachedShadowedTable:
                                "was published")
         R, D = self.chunk_rows, self.dim
         s = int(self.chunk_slot[chunk])
-        m = np.asarray(jax.device_get(win.master[s * R:(s + 1) * R]))
-        a = np.asarray(jax.device_get(win.accum[s * R:(s + 1) * R]))
-        self.host_master[chunk * R:(chunk + 1) * R] = m
-        self.host_accum[chunk * R:(chunk + 1) * R] = a
+        # row-sparse D2H: only the rows the sparse updates touched differ
+        # from the host copy — untouched rows are bitwise equal already.
+        # No recorded touch set (crash recovery / legacy release) → whole
+        # chunk, conservatively.
+        mask = self.dirty_rows.pop(int(chunk), None)
+        rows = np.flatnonzero(mask) if mask is not None else np.arange(R)
+        self.stats.writeback_rows_dirty += int(rows.size)
+        self.stats.writeback_rows_total += R
+        if rows.size:
+            idx = jnp.asarray(s * R + rows, jnp.int32)
+            m = np.asarray(jax.device_get(jnp.take(win.master, idx, axis=0)))
+            a = np.asarray(jax.device_get(jnp.take(win.accum, idx, axis=0)))
+            self.host_master[chunk * R + rows] = m
+            self.host_accum[chunk * R + rows] = a
+            self.stats.swap_out_bytes += int(m.nbytes + a.nbytes)
         self.dirty[chunk] = False
         self.stats.writebacks += 1
-        self.stats.swap_out_bytes += int(m.nbytes + a.nbytes)
 
     def splice(self, table: ET.ShadowedTable,
                plan: Optional[PrefetchPlan]) -> ET.ShadowedTable:
@@ -408,15 +437,35 @@ class CachedShadowedTable:
                       .reshape(C * R, D))
         return ET.ShadowedTable(master=master, shadow=shadow, accum=accum)
 
+    def _mark_rows_dirty_locked(self, uids: Optional[np.ndarray]) -> None:
+        """Fold a batch's touched global ids into the per-chunk row masks
+        (``None`` = unknown touch set: drop to whole-chunk granularity by
+        discarding any partial mask for the affected chunks)."""
+        if uids is None or uids.size == 0:
+            return
+        cid = uids // self.chunk_rows
+        loc = uids % self.chunk_rows
+        for c in np.unique(cid):
+            c = int(c)
+            mask = self.dirty_rows.get(c)
+            if mask is None:
+                # a chunk already dirty WITHOUT a mask stays whole-chunk
+                if self.dirty[c]:
+                    continue
+                mask = self.dirty_rows[c] = np.zeros(self.chunk_rows, bool)
+            mask[loc[cid == c]] = True
+
     def release(self, batch: int, *, dirty: bool = True) -> None:
         """Unpin a batch whose sparse update has landed (``dirty=True``)
         or that was dropped without touching the table."""
         with self._lock:
             chunks = self._batch_chunks.pop(batch, None)
+            rows = self._batch_rows.pop(batch, None)
             if chunks is None:
                 return
             self.pins[chunks] -= 1
             if dirty:
+                self._mark_rows_dirty_locked(rows)
                 self.dirty[chunks] = True
 
     def defer_release(self, batch: int) -> None:
@@ -429,13 +478,16 @@ class CachedShadowedTable:
                 raise RuntimeError("two batches with pending pairs — the "
                                    "τ=1 carry holds at most one")
             self._pending_chunks = self._batch_chunks.pop(batch)
+            self._pending_rows = self._batch_rows.pop(batch, None)
 
     def release_pending(self) -> None:
         """The deferred τ=1 pairs landed: unpin + mark dirty."""
         with self._lock:
             chunks, self._pending_chunks = self._pending_chunks, None
+            rows, self._pending_rows = self._pending_rows, None
             if chunks is not None:
                 self.pins[chunks] -= 1
+                self._mark_rows_dirty_locked(rows)
                 self.dirty[chunks] = True
 
     def reset_pins(self) -> None:
@@ -443,7 +495,9 @@ class CachedShadowedTable:
         took them is gone; dirty flags are kept)."""
         with self._lock:
             self._batch_chunks.clear()
+            self._batch_rows.clear()
             self._pending_chunks = None
+            self._pending_rows = None
             self.pins[:] = 0
 
     # -- full-table assembly (checkpointing) --------------------------------
@@ -471,6 +525,7 @@ class CachedShadowedTable:
             self._flush_into_locked(window, self.host_master,
                                     self.host_accum)
             self.dirty[:] = False
+            self.dirty_rows.clear()
 
     def _flush_into_locked(self, window, m: np.ndarray, a: np.ndarray):
         win = window if window is not None else self._window_ref
@@ -512,9 +567,12 @@ class CachedShadowedTable:
                 jax.device_get(table.accum), np.float32)
             self.host_accum[self.vocab:] = 0.0
             self.dirty[:] = False
+            self.dirty_rows.clear()
             self.pins[:] = 0
             self._batch_chunks.clear()
+            self._batch_rows.clear()
             self._pending_chunks = None
+            self._pending_rows = None
             # admission: forced pending chunks + hottest fill
             admit = list(forced)
             taken = set(admit)
@@ -534,6 +592,8 @@ class CachedShadowedTable:
             if forced.size:
                 self.pins[forced] += 1
                 self._pending_chunks = forced
+                self._pending_rows = np.unique(
+                    np.clip(live, 0, self.vocab - 1))
         return win, (self.slotize_pending(p) if pending_ids is not None
                      else np.empty(0, np.int32))
 
@@ -550,4 +610,6 @@ class CachedShadowedTable:
                 "writebacks": s.writebacks,
                 "swap_in_bytes": s.swap_in_bytes,
                 "swap_out_bytes": s.swap_out_bytes,
-                "warmup_bytes": s.warmup_bytes}
+                "warmup_bytes": s.warmup_bytes,
+                "writeback_rows_dirty": s.writeback_rows_dirty,
+                "writeback_rows_total": s.writeback_rows_total}

@@ -36,8 +36,13 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _token_meta(cap: int, offsets: jax.Array, timestamps: jax.Array):
-    """(meta_i32 (cap,3): seg/pos/ts, meta_f32 (cap,1): 1/n_row)."""
+def _token_meta(cap: int, offsets: jax.Array, timestamps: jax.Array,
+                causal: bool = True):
+    """(meta_i32 (cap,3): seg/pos/ts, meta_f32 (cap,1): per-query 1/n).
+
+    Causal n = pos+1 (visible keys per query — matches the XLA paths and
+    keeps prefix hidden states append-invariant for serving); acausal
+    n = row length."""
     slot = jnp.arange(cap, dtype=jnp.int32)
     total = offsets[-1]
     seg = jnp.searchsorted(offsets, slot, side="right").astype(jnp.int32) - 1
@@ -45,7 +50,10 @@ def _token_meta(cap: int, offsets: jax.Array, timestamps: jax.Array):
     segc = jnp.clip(seg, 0, offsets.shape[0] - 2)
     pos = slot - offsets[segc]
     lengths = offsets[1:] - offsets[:-1]
-    n = jnp.maximum(lengths[segc], 1).astype(jnp.float32)
+    if causal:
+        n = (pos + 1).astype(jnp.float32)
+    else:
+        n = jnp.maximum(lengths[segc], 1).astype(jnp.float32)
     seg = jnp.where(valid, seg, NEG_SEG)
     pos = jnp.where(valid, pos, 0)
     ninv = jnp.where(valid, 1.0 / n, 0.0)
@@ -233,7 +241,7 @@ def build_attn_plan(offsets: jax.Array, timestamps: jax.Array,
     if pad:
         timestamps = jnp.concatenate(
             [timestamps, jnp.zeros((pad,), timestamps.dtype)])
-    meta_i32, meta_f32 = _token_meta(capp, offsets, timestamps)
+    meta_i32, meta_f32 = _token_meta(capp, offsets, timestamps, causal)
     nb = capp // block
     seg_rng = _seg_ranges(meta_i32[:, 0], nb, block)
     if not worklists:

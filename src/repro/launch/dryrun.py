@@ -164,6 +164,114 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool):
     return jitted, (params_sds, inputs), (pspecs, ispecs), plan, mesh
 
 
+def build_serve_cell(arch: str, *, max_users: int = 63,
+                     rows_per_tick: int = 8, append_window: int = 4,
+                     mesh: Any = None, multi_pod: bool = False,
+                     reduce_arch: bool = True) -> Dict[str, Any]:
+    """Compile-verify the continuous-serving layout (PR 8): the cold slot
+    encode (``gr_encode_slots``), the warm append (``gr_append_slots``),
+    and the slot-resident retrieval (``topk_from_slots``) each
+    .lower().compile() with the ``partition.gr_serve_specs`` shardings on
+    ``mesh`` (default: the production mesh; tests pass a fake 8-device
+    mesh). No arrays are allocated — everything lowers against
+    ShapeDtypeStructs. Returns the per-program spec strings + memory
+    analysis for the report."""
+    from repro.configs import get_arch, reduced
+    from repro.models import gr as GRM
+    from repro.serving.retrieval import topk_from_slots
+
+    cfg = get_arch(arch)
+    if not cfg.gr:
+        raise ValueError(f"{arch} is not a GR arch")
+    if reduce_arch:
+        cfg = reduced(cfg)
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    bundle = get_bundle(cfg)
+    key = jax.random.PRNGKey(0)
+    dense_sds = jax.eval_shape(bundle.init_dense, key)
+    table_sds = jax.eval_shape(bundle.init_table, key)
+    S, d = cfg.max_seq_len, cfg.d_model
+    dqk = cfg.qkv_dim or cfg.resolved_head_dim
+    kv_shape = (cfg.num_layers, cfg.num_heads, dqk, dqk)
+    specs = PT.gr_serve_specs(mesh, max_users=max_users, max_seq_len=S,
+                              d_model=d, kv_shape=kv_shape,
+                              vocab=int(table_sds.shape[0]))
+    dspecs = jax.tree.map(lambda l: P(*([None] * len(l.shape))), dense_sds)
+    dt = jnp.dtype(cfg.dtype)
+    eff = GRM.serve_attn_block(S)
+    N1, R, Q = max_users + 1, rows_per_tick, append_window
+    sds = jax.ShapeDtypeStruct
+    bufs = {
+        "tokens": sds((N1, S), jnp.int32),
+        "timestamps": sds((N1, S), jnp.int32),
+        "emb": sds((N1, d), dt),
+        "kv_k": sds((N1,) + (kv_shape[0], S, kv_shape[1], kv_shape[2]), dt),
+        "kv_v": sds((N1,) + (kv_shape[0], S, kv_shape[1], kv_shape[3]), dt),
+    }
+    ns = lambda s: NamedSharding(mesh, s)
+    buf_shard = tuple(ns(specs[k]) for k in
+                      ("tokens", "timestamps", "emb", "kv_k", "kv_v"))
+
+    def cold(dense_p, master, tokens, ts_buf, emb, kv_k, kv_v,
+             rows, row_ids, row_ts, lengths):
+        tokens = tokens.at[rows].set(row_ids)
+        ts_buf = ts_buf.at[rows].set(row_ts)
+        x = jnp.take(master, row_ids, axis=0).astype(dt)
+        e, kr, vr = GRM.gr_encode_slots(dense_p, cfg, x, row_ts, lengths,
+                                        attn_block=eff)
+        return (tokens, ts_buf, emb.at[rows].set(e),
+                kv_k.at[rows].set(kr), kv_v.at[rows].set(vr))
+
+    def warm(dense_p, master, tokens, ts_buf, emb, kv_k, kv_v,
+             rows, new_ids, new_ts, pref, nnew):
+        upd = jax.vmap(lambda r, u, p:
+                       jax.lax.dynamic_update_slice(r, u, (p,)))
+        tok_rows = upd(tokens[rows], new_ids, pref)
+        ts_rows = upd(ts_buf[rows], new_ts, pref)
+        x_new = jnp.take(master, new_ids, axis=0).astype(dt)
+        e, kr, vr = GRM.gr_append_slots(dense_p, cfg, x_new, ts_rows,
+                                        kv_k[rows], kv_v[rows], pref, nnew,
+                                        kv_block=eff)
+        return (tokens.at[rows].set(tok_rows), ts_buf.at[rows].set(ts_rows),
+                emb.at[rows].set(e), kv_k.at[rows].set(kr),
+                kv_v.at[rows].set(vr))
+
+    def rank(emb_buf, rows, scan):
+        return topk_from_slots(emb_buf, rows, scan, k=16,
+                               block_v=min(4096, int(table_sds.shape[0])))
+
+    out: Dict[str, Any] = {"arch": arch, "mesh_shape": dict(mesh.shape),
+                           "specs": {k: str(v) for k, v in specs.items()},
+                           "ok": True}
+    cold_j = jax.jit(cold, in_shardings=(
+        PT.to_named(mesh, dspecs), ns(specs["scan_table"]), *buf_shard,
+        ns(P()), ns(P()), ns(P()), ns(P())))
+    warm_j = jax.jit(warm, in_shardings=(
+        PT.to_named(mesh, dspecs), ns(specs["scan_table"]), *buf_shard,
+        ns(P()), ns(P()), ns(P()), ns(P()), ns(P())))
+    rank_j = jax.jit(rank, in_shardings=(
+        ns(specs["emb"]), ns(specs["rows"]), ns(specs["scan_table"])))
+
+    compiled = {}
+    compiled["cold"] = cold_j.lower(
+        dense_sds, table_sds, *(bufs[k] for k in bufs),
+        sds((R,), jnp.int32), sds((R, S), jnp.int32),
+        sds((R, S), jnp.int32), sds((R,), jnp.int32)).compile()
+    compiled["warm"] = warm_j.lower(
+        dense_sds, table_sds, *(bufs[k] for k in bufs),
+        sds((R,), jnp.int32), sds((R, Q), jnp.int32),
+        sds((R, Q), jnp.int32), sds((R,), jnp.int32),
+        sds((R,), jnp.int32)).compile()
+    compiled["rank"] = rank_j.lower(
+        bufs["emb"], sds((R,), jnp.int32), table_sds).compile()
+    for name, c in compiled.items():
+        ma = c.memory_analysis()
+        out[name] = {"argument_bytes": int(getattr(
+            ma, "argument_size_in_bytes", 0)) if ma is not None else 0}
+    return out
+
+
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              hlo_dir: str = "") -> Dict[str, Any]:
     cfg = get_arch(arch)

@@ -270,6 +270,51 @@ def gr_pend_spec(mesh: Mesh, n_pend: int) -> P:
     return _guard(mesh, (n_pend,), (dp,))
 
 
+def gr_serve_specs(mesh: Mesh, *, max_users: int, max_seq_len: int,
+                   d_model: int,
+                   kv_shape: Optional[Tuple[int, int, int, int]] = None,
+                   vocab: int = 0) -> Dict[str, P]:
+    """Serving-side layout for the continuous-batching engine
+    (``StreamingRecallEngine``): how the persistent slot buffers, the
+    serving forward, and the retrieval scan map onto a serving mesh.
+
+      * slot-state rows (tokens/timestamps/emb/KV caches, leading dim
+        ``max_users + 1`` including the scratch lane) shard over the data
+        axes — each data shard owns a partition of the user slots, the
+        serving twin of batch-over-DP;
+      * the K/V prefix caches (N+1, L, S, H, dqk) additionally shard
+        attention heads over ``model`` (the heads axis is embarrassingly
+        parallel in pointwise attention);
+      * the retrieval ``scan_table`` (V, D) vocab-shards over ``model`` —
+        each shard scans its vocab partition and the (B, k) top-k merge
+        is the only cross-shard exchange (k ≪ block_v);
+      * the tick's ``rows`` index vector and the dense backbone stay
+        replicated (the backbone is ≤0.2B, the paper's layout).
+
+    Every mapping goes through the divisibility guard, so a dim that the
+    mesh does not divide falls back to replicated instead of failing.
+    Compile-verified on a fake 8-device mesh by ``launch.dryrun.
+    build_serve_cell`` / tests/test_serving_stream.py.
+    """
+    dp = _dp_axes(mesh) or None
+    model = "model" if "model" in mesh.shape else None
+    rows = max_users + 1
+    out: Dict[str, P] = {
+        "tokens": _guard(mesh, (rows, max_seq_len), (dp, None)),
+        "timestamps": _guard(mesh, (rows, max_seq_len), (dp, None)),
+        "emb": _guard(mesh, (rows, d_model), (dp, None)),
+        "rows": P(),
+        "scan_table": _guard(mesh, (vocab, d_model), (model, None)),
+    }
+    if kv_shape is not None:
+        L, H, dqk, dv = kv_shape
+        out["kv_k"] = _guard(mesh, (rows, L, max_seq_len, H, dqk),
+                             (dp, None, None, model, None))
+        out["kv_v"] = _guard(mesh, (rows, L, max_seq_len, H, dv),
+                             (dp, None, None, model, None))
+    return out
+
+
 # --------------------------------------------------------------------------
 # batch / cache / state specs
 # --------------------------------------------------------------------------

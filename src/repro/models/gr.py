@@ -28,7 +28,9 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.kernels.jagged_attention import ops as attn_ops
 from repro.models.fuxi import fuxi_block, init_fuxi_block
-from repro.models.hstu import hstu_block, init_hstu_block
+from repro.models.hstu import (hstu_block, hstu_block_append, hstu_block_kv,
+                               init_hstu_block,
+                               jagged_pointwise_attention_blocked)
 from repro.models.sasrec import init_sasrec_block, sasrec_block
 
 Params = Dict[str, Any]
@@ -85,7 +87,13 @@ def gr_hidden(params: Params, cfg: ArchConfig, x: jax.Array,
         return f(x), None
 
     x, _ = jax.lax.scan(body, x, params["blocks"])
-    # final non-affine-free layernorm over the hidden stream
+    return _final_norm(params, cfg, x)
+
+
+def _final_norm(params: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """Final affine layernorm over the hidden stream — row-local, shared by
+    the packed forward and the serving row/append entries so all paths end
+    in bitwise-identical ops."""
     xf = x.astype(jnp.float32)
     mu = jnp.mean(xf, axis=-1, keepdims=True)
     var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
@@ -141,3 +149,118 @@ def gr_user_embeddings_sharded(params: Params, cfg: ArchConfig,
     fn = lambda xx, oo, tt, lp: gr_user_embeddings(
         params, cfg, xx, oo, tt, lp, attn_fn=attn_fn)
     return jax.vmap(fn)(x, offsets, timestamps, last_pos)
+
+
+# --------------------------------------------------------------------------
+# slot-buffer serving entries — one user per row, incremental prefix reuse
+# --------------------------------------------------------------------------
+
+def serve_attn_block(seq_len: int) -> int:
+    """Effective kv-block the XLA blocked attention uses on one slot row:
+    ``min(512, S)`` when it divides S (the training default after its
+    internal ``block = min(block, cap)`` clamp), else the largest divisor
+    of S ≤ 512. The warm append path must scan the key axis in the same
+    block order to stay bitwise-equal to the cold full encode."""
+    if seq_len <= 512:
+        return seq_len
+    for b in range(512, 0, -1):
+        if seq_len % b == 0:
+            return b
+    return seq_len
+
+
+def gr_serve_row_kv(params: Params, cfg: ArchConfig, x: jax.Array,
+                    timestamps: jax.Array, length: jax.Array,
+                    *, attn_block: Optional[int] = None):
+    """Cold path of the slot-buffer engine: full encode of one slot row
+    x (S, d) / timestamps (S,), also collecting every layer's K/V
+    projections to seed the slot's prefix cache.
+
+    Returns (emb (d,), k (L, S, H, dqk), v (L, S, H, dv)). Slots past
+    ``length`` may hold arbitrary finite values — masked attention
+    contributes exact zeros, so emb is bitwise-equal to the packed
+    :func:`gr_user_embeddings` on the same live tokens. HSTU-only (the
+    K/V-cache contract is the HSTU block's)."""
+    if (cfg.gr_block or "hstu") != "hstu":
+        raise ValueError("prefix reuse requires gr_block='hstu', got "
+                         f"{cfg.gr_block!r}")
+    S = x.shape[0]
+    blk = attn_block or serve_attn_block(S)
+    attn_fn = partial(jagged_pointwise_attention_blocked, block=blk)
+    offsets = jnp.stack([jnp.zeros((), jnp.int32), length.astype(jnp.int32)])
+
+    def body(x, bp):
+        out, k, v = hstu_block_kv(bp, cfg, x, offsets, timestamps,
+                                  attn_fn=attn_fn)
+        return out, (k, v)
+
+    h, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+    h = _final_norm(params, cfg, h)
+    emb = jnp.take(h, jnp.maximum(length - 1, 0), axis=0)
+    return emb, ks, vs
+
+
+def gr_serve_row_append(params: Params, cfg: ArchConfig, x_new: jax.Array,
+                        timestamps: jax.Array,
+                        k_cache: jax.Array, v_cache: jax.Array,
+                        prefix_len: jax.Array, n_new: jax.Array,
+                        *, kv_block: Optional[int] = None):
+    """Warm path: encode only the appended tokens x_new (Q, d) of one slot
+    row against the cached prefix K/V (L, S, H, ·), updating the caches in
+    place at [prefix_len, prefix_len+Q).
+
+    Returns (emb (d,), k_cache, v_cache) with emb the hidden state of the
+    last live appended token — bitwise-equal to a from-scratch encode of
+    the full row (causality keeps prefix hidden states unchanged; the
+    append attention mirrors the blocked kernel's accumulation order)."""
+    S = timestamps.shape[0]
+    blk = kv_block or serve_attn_block(S)
+
+    def body(x, layer):
+        bp, kc, vc = layer
+        out, kc, vc = hstu_block_append(bp, cfg, x, timestamps, kc, vc,
+                                        prefix_len, n_new, kv_block=blk)
+        return out, (kc, vc)
+
+    h, (ks, vs) = jax.lax.scan(
+        body, x_new, (params["blocks"], k_cache, v_cache))
+    h = _final_norm(params, cfg, h)
+    emb = jnp.take(h, jnp.maximum(n_new - 1, 0), axis=0)
+    return emb, ks, vs
+
+
+def gr_encode_slots(params: Params, cfg: ArchConfig, x: jax.Array,
+                    timestamps: jax.Array, lengths: jax.Array,
+                    *, attn_block: Optional[int] = None):
+    """Cold tick over R slot rows: x (R, S, d), ts (R, S), lengths (R,) →
+    (emb (R, d), k (R, L, S, H, dqk), v (R, L, S, H, dv))."""
+    fn = lambda xx, tt, ll: gr_serve_row_kv(params, cfg, xx, tt, ll,
+                                            attn_block=attn_block)
+    return jax.vmap(fn)(x, timestamps, lengths)
+
+
+def gr_append_slots(params: Params, cfg: ArchConfig, x_new: jax.Array,
+                    timestamps: jax.Array,
+                    k_cache: jax.Array, v_cache: jax.Array,
+                    prefix_len: jax.Array, n_new: jax.Array,
+                    *, kv_block: Optional[int] = None):
+    """Warm tick over R slot rows: x_new (R, Q, d), ts (R, S), caches
+    (R, L, S, H, ·), prefix_len/n_new (R,) → (emb (R, d), k, v)."""
+    fn = lambda xx, tt, kk, vv, pp, nn: gr_serve_row_append(
+        params, cfg, xx, tt, kk, vv, pp, nn, kv_block=kv_block)
+    return jax.vmap(fn)(x_new, timestamps, k_cache, v_cache,
+                        prefix_len, n_new)
+
+
+def gr_encode_slots_flat(params: Params, cfg: ArchConfig, x: jax.Array,
+                         timestamps: jax.Array, lengths: jax.Array,
+                         *, attn_fn: Optional[Callable] = None) -> jax.Array:
+    """Cold tick without K/V collection (any gr_block): row-per-user full
+    encode, (R, S, d) → (R, d). The no-prefix-reuse fallback of the
+    streaming engine (SASRec/FuXi, or kv_cache=False)."""
+    def one(xx, tt, ll):
+        offsets = jnp.stack([jnp.zeros((), jnp.int32), ll.astype(jnp.int32)])
+        h = gr_hidden(params, cfg, xx, offsets, tt, attn_fn=attn_fn,
+                      remat=False)
+        return jnp.take(h, jnp.maximum(ll - 1, 0), axis=0)
+    return jax.vmap(one)(x, timestamps, lengths)

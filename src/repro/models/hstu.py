@@ -5,8 +5,14 @@ int32 row offsets (``core.jagged.JaggedBatch`` layout). Attention is
 *pointwise* (softmax-free):
 
     U,V,Q,K = split(SiLU(f1(norm(X))))
-    A       = SiLU(QK^T * scale + RAB(pos, time)) * same_seg_causal / n_row
+    A       = SiLU(QK^T * scale + RAB(pos, time)) * same_seg_causal / (pos+1)
     Y       = f2(norm(A V) * U);  out = X + Y
+
+The divisor is the per-query causal count (pos+1), not the row length: the
+non-affine norm right after makes the two mathematically equivalent (scale
+invariance, modulo eps), but only the per-query count keeps prefix hidden
+states bitwise-stable as a user's sequence grows — the property the serving
+warm path's incremental prefix reuse is built on.
 
 RAB = per-head relative-position bucket table + bucketized relative-time
 table (paper Appendix A: 32 time buckets). The XLA path here is the pure-jnp
@@ -123,7 +129,14 @@ def jagged_pointwise_attention(
     mask = (seg[:, None] == seg[None, :]) & (seg[:, None] >= 0)
     if causal:
         mask &= slot[:, None] >= slot[None, :]
-    n = jnp.maximum(lengths[jnp.clip(seg, 0, offsets.shape[0] - 2)], 1)
+        # normalize by the per-query causal count (pos+1) — post-LN this is
+        # mathematically equivalent to the row-length divisor (LN is scale
+        # invariant) but keeps every prefix hidden state bitwise-stable when
+        # events are appended, which is what makes the serving warm path's
+        # prefix reuse exact (see pointwise_attention_append)
+        n = pos + 1
+    else:
+        n = jnp.maximum(lengths[jnp.clip(seg, 0, offsets.shape[0] - 2)], 1)
     a = jnp.where(mask[..., None], a, 0.0) / n[:, None, None].astype(jnp.float32)
     return jnp.einsum("qkh,khd->qhd", a.astype(v.dtype), v,
                       preferred_element_type=jnp.float32).astype(v.dtype)
@@ -158,7 +171,10 @@ def jagged_pointwise_attention_blocked(
     seg = jnp.where(slot < total, seg, -1)
     lengths = offsets[1:] - offsets[:-1]
     pos = slot - offsets[jnp.clip(seg, 0, offsets.shape[0] - 2)]
-    n_row = jnp.maximum(lengths[jnp.clip(seg, 0, offsets.shape[0] - 2)], 1)
+    if causal:
+        n_row = pos + 1      # per-query causal count (see the oracle)
+    else:
+        n_row = jnp.maximum(lengths[jnp.clip(seg, 0, offsets.shape[0] - 2)], 1)
 
     @partial(jax.checkpoint,
              policy=jax.checkpoint_policies.nothing_saveable)
@@ -245,6 +261,56 @@ def _block_norm(x: jax.Array, w, b, eps: float) -> jax.Array:
     return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
 
 
+def _hstu_uvqk(p: Params, cfg: ArchConfig, x: jax.Array
+               ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Row-local front half of an HSTU block: norm → SiLU(f1) → split.
+
+    Shared verbatim by the packed training forward, the serving cold path
+    (K/V collection) and the serving warm path (append) so all three emit
+    bitwise-identical projections for the same input rows. x: (n, d) →
+    u (n, H·dv), v (n, H, dv), q (n, H, dqk), k (n, H, dqk).
+    """
+    H = cfg.num_heads
+    dqk = cfg.qkv_dim or cfg.resolved_head_dim
+    dv = dqk
+    n = x.shape[0]
+    h = _block_norm(x, p["ln_w"], p["ln_b"], cfg.norm_eps)
+    uvqk = _silu(h @ p["w_uvqk"])
+    u, v, q, k = jnp.split(
+        uvqk, [H * dv, 2 * H * dv, 2 * H * dv + H * dqk], axis=-1)
+    return u, v.reshape(n, H, dv), q.reshape(n, H, dqk), k.reshape(n, H, dqk)
+
+
+def _hstu_output(p: Params, cfg: ArchConfig, x: jax.Array,
+                 y: jax.Array, u: jax.Array) -> jax.Array:
+    """Row-local back half: non-affine LN of the attention output, gated by
+    U, projected by f2, residual (HSTU eq. Y). y: (n, H, dv)."""
+    n = y.shape[0]
+    y = y.reshape(n, -1)
+    yf = y.astype(jnp.float32)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.mean((yf - mu) ** 2, axis=-1, keepdims=True)
+    yn = ((yf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)).astype(x.dtype)
+    out = (yn * u) @ p["w_o"]
+    return x + out
+
+
+def hstu_block_kv(p: Params, cfg: ArchConfig, x: jax.Array,
+                  offsets: jax.Array, timestamps: jax.Array,
+                  *, attn_fn=None, time_mode: str = "bucket",
+                  plan=None) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One HSTU block that also returns its K/V projections (cap, H, ·) —
+    the serving cold path seeds the per-slot K/V cache from these. Exactly
+    :func:`hstu_block` with (k, v) surfaced; the training path discards
+    them (DCE removes the extra outputs under jit)."""
+    u, v, q, k = _hstu_uvqk(p, cfg, x)
+    attn_fn = attn_fn or partial(jagged_pointwise_attention_blocked, block=512)
+    kw = {"plan": plan} if plan is not None else {}
+    y = attn_fn(q, k, v, offsets, timestamps, p["rab"],
+                cfg.rab, time_mode=time_mode, **kw)
+    return _hstu_output(p, cfg, x, y, u), k, v
+
+
 def hstu_block(p: Params, cfg: ArchConfig, x: jax.Array,
                offsets: jax.Array, timestamps: jax.Array,
                *, attn_fn=None, time_mode: str = "bucket",
@@ -255,29 +321,101 @@ def hstu_block(p: Params, cfg: ArchConfig, x: jax.Array,
     plan-aware ``attn_fn`` (kernels.jagged_attention.PlannedAttention) so
     the per-step metadata is built once, not once per layer.
     """
-    H = cfg.num_heads
-    dqk = cfg.qkv_dim or cfg.resolved_head_dim
-    dv = dqk
-    cap, d = x.shape
+    out, _, _ = hstu_block_kv(p, cfg, x, offsets, timestamps,
+                              attn_fn=attn_fn, time_mode=time_mode, plan=plan)
+    return out
 
-    h = _block_norm(x, p["ln_w"], p["ln_b"], cfg.norm_eps)
-    uvqk = _silu(h @ p["w_uvqk"])
-    u, v, q, k = jnp.split(
-        uvqk, [H * dv, 2 * H * dv, 2 * H * dv + H * dqk], axis=-1)
-    q = q.reshape(cap, H, dqk)
-    k = k.reshape(cap, H, dqk)
-    v = v.reshape(cap, H, dv)
 
-    attn_fn = attn_fn or partial(jagged_pointwise_attention_blocked, block=512)
-    kw = {"plan": plan} if plan is not None else {}
-    y = attn_fn(q, k, v, offsets, timestamps, p["rab"],
-                cfg.rab, time_mode=time_mode, **kw)
+# --------------------------------------------------------------------------
+# incremental prefix reuse — warm-path append attention (serving)
+# --------------------------------------------------------------------------
 
-    y = y.reshape(cap, H * dv)
-    # non-affine layernorm on the attention output, gated by U (HSTU eq. Y)
-    yf = y.astype(jnp.float32)
-    mu = jnp.mean(yf, axis=-1, keepdims=True)
-    var = jnp.mean((yf - mu) ** 2, axis=-1, keepdims=True)
-    yn = ((yf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)).astype(x.dtype)
-    out = (yn * u) @ p["w_o"]
-    return x + out
+def pointwise_attention_append(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    timestamps: jax.Array, prefix_len: jax.Array, n_new: jax.Array,
+    rab_params: Params, rab: Optional[RABConfig],
+    *, kv_block: int = 512, time_mode: str = "bucket",
+    score_dtype=jnp.float32,
+) -> jax.Array:
+    """Asymmetric warm-path attention: Q appended-token queries against one
+    slot row's full (S, H, ·) key/value buffers (cached prefix + the new
+    projections already scattered in at [prefix_len, prefix_len+Q)).
+
+    Bitwise-matches :func:`jagged_pointwise_attention_blocked` for the same
+    row: the key axis is scanned in the same kv-block order with the same
+    fp32 accumulator initialised at zero and the divide-by-n applied once
+    after the scan, and masked positions contribute exact 0.0 — so slots
+    past the live length may hold arbitrary (finite) stale values. Query
+    rows at or past ``n_new`` are fully masked; callers ignore them.
+    """
+    Q, H, dqk = q.shape
+    S = k.shape[0]
+    dv = v.shape[-1]
+    scale = 1.0 / math.sqrt(dqk)
+    kv_block = min(kv_block, S)
+    assert S % kv_block == 0, (S, kv_block)
+    nb = S // kv_block
+
+    total = (prefix_len + n_new).astype(jnp.int32)
+    qpos = prefix_len.astype(jnp.int32) + jnp.arange(Q, dtype=jnp.int32)
+    qts = jax.lax.dynamic_slice_in_dim(timestamps, prefix_len, Q, 0)
+    qlive = jnp.arange(Q, dtype=jnp.int32) < n_new
+
+    def kv_step(acc, ki):
+        kb = jax.lax.dynamic_slice_in_dim(k, ki * kv_block, kv_block, 0)
+        vb = jax.lax.dynamic_slice_in_dim(v, ki * kv_block, kv_block, 0)
+        kts = jax.lax.dynamic_slice_in_dim(timestamps, ki * kv_block,
+                                           kv_block, 0)
+        kpos = ki * kv_block + jnp.arange(kv_block, dtype=jnp.int32)
+        s = (jnp.einsum("qhd,khd->qkh", q, kb,
+                        preferred_element_type=jnp.float32)
+             * scale).astype(score_dtype)
+        if rab is not None:
+            if time_mode == "bucket":
+                s = s + rab_bias(rab_params, rab, qpos, kpos, qts,
+                                 kts).astype(score_dtype)
+            else:
+                if rab.use_pos and "pos_table" in rab_params:
+                    s = s + rab_params["pos_table"][
+                        pos_bucket(qpos, kpos, rab.num_pos_buckets)
+                    ].astype(score_dtype)
+                s = s + functional_time_bias(rab_params, qts,
+                                             kts).astype(score_dtype)
+        a = _silu(s)
+        m = ((kpos[None, :] < total)
+             & (qpos[:, None] >= kpos[None, :])
+             & qlive[:, None])
+        a = jnp.where(m[..., None], a, jnp.zeros((), score_dtype))
+        acc = acc + jnp.einsum("qkh,khd->qhd", a.astype(vb.dtype), vb,
+                               preferred_element_type=jnp.float32)
+        return acc, None
+
+    acc0 = jnp.zeros((Q, H, dv), jnp.float32)
+    acc, _ = jax.lax.scan(kv_step, acc0, jnp.arange(nb, dtype=jnp.int32))
+    n = qpos + 1             # per-query causal count, as in the cold path
+    return (acc / n[:, None, None].astype(jnp.float32)).astype(v.dtype)
+
+
+def hstu_block_append(p: Params, cfg: ArchConfig, x_new: jax.Array,
+                      timestamps: jax.Array,
+                      k_cache: jax.Array, v_cache: jax.Array,
+                      prefix_len: jax.Array, n_new: jax.Array,
+                      *, kv_block: int = 512, time_mode: str = "bucket",
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Warm-path HSTU block: encode only the appended tokens of one slot
+    row against the row's cached prefix K/V.
+
+    x_new (Q, d) are the layer inputs for the appended tokens (bitwise-equal
+    to rows [prefix_len, prefix_len+n_new) of the full-encode input — the
+    attention is causal, so prefix hidden states never change under append);
+    timestamps is the full (S,) row; k_cache/v_cache are (S, H, ·) with
+    [0, prefix_len) valid. Returns (out_new (Q, d), k_cache, v_cache) with
+    the new projections scattered in at [prefix_len, prefix_len+Q).
+    """
+    u, v_new, q_new, k_new = _hstu_uvqk(p, cfg, x_new)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new, (prefix_len, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new, (prefix_len, 0, 0))
+    y = pointwise_attention_append(
+        q_new, k_cache, v_cache, timestamps, prefix_len, n_new,
+        p["rab"], cfg.rab, kv_block=kv_block, time_mode=time_mode)
+    return _hstu_output(p, cfg, x_new, y, u), k_cache, v_cache

@@ -1,26 +1,38 @@
 """Batched jagged recall serving — the inference side of the GR system.
 
-Three layers (see each module's docstring):
+Two engines over shared retrieval:
 
-  * :mod:`repro.serving.scheduler` — request admission + capacity-bounded
-    jagged micro-batch packing (LPT over serving shards, deadline flush);
-  * :mod:`repro.serving.state_cache` — incremental per-user history
-    (ring-buffer truncation at max_seq_len) + versioned embedding cache;
-  * :mod:`repro.serving.retrieval` — sharded blocked top-k over the FP16
-    shadow table (fp32 full scoring kept as the parity oracle);
+  * :class:`repro.serving.engine.StreamingRecallEngine` — the continuous-
+    batching path: persistent device-resident user state
+    (:mod:`repro.serving.slot_buffer`), open-loop admission + budget-
+    bounded tick formation (:class:`scheduler.ContinuousScheduler`),
+    incremental prefix-reuse encodes, and ranking straight from the slot
+    embedding buffer;
+  * :class:`repro.serving.engine.RecallEngine` — the closed-loop micro-
+    batch path (scheduler → cached jagged encode → top-k), kept as the
+    bit-parity baseline and for one-shot batch scoring;
 
-assembled by :class:`repro.serving.engine.RecallEngine`.
+with :mod:`repro.serving.retrieval` (sharded blocked top-k over the FP16
+shadow table, fp32 full scoring as the parity oracle) underneath both.
 """
-from repro.serving.engine import RecallEngine, ServeResult
+from repro.serving.engine import (RecallEngine, ServeResult,
+                                  StreamingRecallEngine)
 from repro.serving.retrieval import (ShardedTopK, bytes_per_query,
                                      table_scan_bytes, topk_blocked,
-                                     topk_dense)
-from repro.serving.scheduler import (MicroBatch, RequestScheduler,
-                                     ServeRequest, Slot)
+                                     topk_dense, topk_from_slots)
+from repro.serving.scheduler import (Admission, ContinuousScheduler,
+                                     MicroBatch, RequestScheduler,
+                                     ServeRequest, Slot, TickPlan)
+from repro.serving.slot_buffer import (BucketLadder, CompileCache,
+                                       SequenceBuffer)
 from repro.serving.state_cache import UserState, UserStateCache
 
 __all__ = [
-    "RecallEngine", "ServeResult", "RequestScheduler", "MicroBatch",
-    "ServeRequest", "Slot", "UserState", "UserStateCache", "ShardedTopK",
-    "topk_blocked", "topk_dense", "table_scan_bytes", "bytes_per_query",
+    "RecallEngine", "StreamingRecallEngine", "ServeResult",
+    "RequestScheduler", "ContinuousScheduler", "Admission", "TickPlan",
+    "MicroBatch", "ServeRequest", "Slot",
+    "SequenceBuffer", "BucketLadder", "CompileCache",
+    "UserState", "UserStateCache", "ShardedTopK",
+    "topk_blocked", "topk_dense", "topk_from_slots",
+    "table_scan_bytes", "bytes_per_query",
 ]

@@ -78,6 +78,21 @@ def topk_blocked(emb: jax.Array, table: jax.Array, *, k: int,
     return vals, idx
 
 
+def topk_from_slots(emb_buffer: jax.Array, rows: jax.Array,
+                    table: jax.Array, *, k: int, block_v: int = 4096
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Rank straight from the slot-resident embedding buffer: gather the
+    requested slot rows on device and run the blocked scan — user
+    embeddings never stage through the host (the continuous engine's
+    retrieval entry). Pad lanes index the scratch row; callers slice them
+    off. Returns (scores, item ids, gathered query rows) — the query rows
+    ride along so the engine's single device→host copy also covers the
+    ``user_emb`` field of the results."""
+    q = jnp.take(emb_buffer, rows, axis=0)
+    vals, idx = topk_blocked(q, table, k=k, block_v=block_v)
+    return vals, idx, q
+
+
 # --------------------------------------------------------------------------
 # byte accounting (what bench_serving reports)
 # --------------------------------------------------------------------------

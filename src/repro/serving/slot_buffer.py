@@ -1,0 +1,344 @@
+"""Persistent device-resident user state for continuous-batching serving.
+
+The PR-4 ``RecallEngine`` re-packed every changed user's full history into a
+fresh jagged micro-batch each step — user state lived on the host and the
+device saw only transient pack buffers. :class:`SequenceBuffer` inverts
+that: user sequences live *on device* in slot-indexed ``(max_users+1,
+max_seq_len)`` token/timestamp arrays (one user per row, chronological,
+position 0 oldest), alongside per-slot embedding rows and optional
+per-layer K/V prefix caches for the incremental warm path
+(``models.gr.gr_append_slots``). The host keeps the free-slot map, per-slot
+length/version scalars, and a mirror of the token/timestamp rows (the
+mirror is what cold re-encodes and evict/re-admit cycles are rebuilt from).
+
+Row ``max_users`` is a scratch lane: bucketed ticks pad their row lists
+with it, so pad-lane scatters land somewhere harmless instead of
+corrupting a live user.
+
+Timestamps are stored raw (not normalized to ``ts - ts[0]`` as the
+micro-batch packer does): the relative attention bias only consumes int32
+timestamp *differences*, so a uniform shift is bitwise-neutral — verified
+by the parity tests.
+
+Also here: :class:`BucketLadder` (the bounded power-of-two shape ladder
+shared by encode and retrieval) and :class:`CompileCache` (the explicit
+compile cache with recompile counters surfaced in engine stats).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["BucketLadder", "CompileCache", "SequenceBuffer"]
+
+
+class BucketLadder:
+    """Bounded power-of-two bucket ladder: ``bucket(n)`` rounds a dynamic
+    size up to the smallest rung ≥ n, so every jitted shape comes from a
+    fixed, small set and the compile count is bounded by ``len(rungs)``
+    per function, not by the traffic."""
+
+    def __init__(self, max_size: int, min_size: int = 1):
+        if max_size < 1 or min_size < 1 or min_size > max_size:
+            raise ValueError((min_size, max_size))
+        rungs: List[int] = []
+        b = 1
+        while b < min_size:
+            b *= 2
+        while b < max_size:
+            rungs.append(b)
+            b *= 2
+        rungs.append(max_size)
+        self.rungs: Tuple[int, ...] = tuple(rungs)
+        self.max_size = max_size
+
+    def bucket(self, n: int) -> int:
+        if n > self.max_size:
+            raise ValueError(f"size {n} exceeds ladder max {self.max_size}")
+        for r in self.rungs:
+            if r >= n:
+                return r
+        return self.max_size  # pragma: no cover (max rung always matches)
+
+
+class CompileCache:
+    """Explicit compile cache over bucketed shapes.
+
+    ``get(name, key, build)`` returns the cached callable for the (name,
+    shape-bucket) pair, building (and counting a compile for) it on first
+    use. jax.jit keeps its own trace cache underneath; this layer exists to
+    make the recompile count an *observable* — ``stats()`` feeds the
+    engine's ``recompiles`` counter, which the open-loop benchmark reports.
+    """
+
+    def __init__(self):
+        self._fns: Dict[Tuple[Any, ...], Callable] = {}
+        self.calls = 0
+
+    def get(self, name: str, key: Tuple[Any, ...],
+            build: Callable[[], Callable]) -> Callable:
+        k = (name,) + tuple(key)
+        fn = self._fns.get(k)
+        if fn is None:
+            fn = self._fns[k] = build()
+        self.calls += 1
+        return fn
+
+    @property
+    def compiles(self) -> int:
+        return len(self._fns)
+
+    def stats(self) -> Dict[str, Any]:
+        per_name: Dict[str, int] = {}
+        for k in self._fns:
+            per_name[k[0]] = per_name.get(k[0], 0) + 1
+        return {"compiles": len(self._fns), "calls": self.calls,
+                "per_fn": per_name}
+
+
+class SequenceBuffer:
+    """Slot-indexed persistent user state: device arrays + host free map.
+
+    Invariants (property-tested in tests/test_serving_stream.py):
+
+      * every live user maps to exactly one slot; free ∪ live is a
+        partition of [0, max_users);
+      * ``0 < length[slot] ≤ max_seq_len`` for live slots and the host
+        mirror's first ``length`` positions hold the newest events in
+        chronological order (ring semantics: an overflowing append keeps
+        the last ``max_seq_len`` events);
+      * ``version[slot]`` strictly increases with every state change of
+        the slot's user, and ``enc_version[slot] == version[slot]`` iff
+        the device embedding row is fresh;
+      * an evicted user is reported exactly once via ``take_evicted`` and
+        must then be re-seeded with full history.
+    """
+
+    def __init__(self, max_users: int, max_seq_len: int, d_model: int,
+                 *, dtype="bfloat16",
+                 kv_shape: Optional[Tuple[int, int, int, int]] = None,
+                 kv_dtype=None):
+        if max_users < 1 or max_seq_len < 1:
+            raise ValueError((max_users, max_seq_len))
+        self.max_users = int(max_users)
+        self.max_seq_len = int(max_seq_len)
+        self.d_model = int(d_model)
+        N, S = self.max_users, self.max_seq_len
+        dt = jnp.dtype(dtype)
+
+        # device state — row N is the scratch lane for bucketed-tick padding
+        self.tokens = jnp.zeros((N + 1, S), jnp.int32)
+        self.timestamps = jnp.zeros((N + 1, S), jnp.int32)
+        self.emb = jnp.zeros((N + 1, d_model), dt)
+        self.kv_k = self.kv_v = None
+        if kv_shape is not None:
+            L, H, dqk, dv = kv_shape
+            kdt = jnp.dtype(kv_dtype or dt)
+            self.kv_k = jnp.zeros((N + 1, L, S, H, dqk), kdt)
+            self.kv_v = jnp.zeros((N + 1, L, S, H, dv), kdt)
+
+        # host mirrors + per-slot scalars
+        self.h_ids = np.zeros((N, S), np.int32)
+        self.h_ts = np.zeros((N, S), np.int32)
+        self.user = np.full(N, -1, np.int64)
+        self.length = np.zeros(N, np.int32)
+        self.version = np.zeros(N, np.int64)
+        self.enc_len = np.full(N, -1, np.int32)     # tokens covered by emb/kv
+        self.enc_version = np.full(N, -1, np.int64)
+        self.needs_cold = np.zeros(N, bool)         # seed/truncate → full encode
+        self.last_used = np.zeros(N, np.int64)
+
+        self._slot_of: Dict[int, int] = {}
+        self._free: List[int] = list(range(N - 1, -1, -1))
+        self._evicted: set = set()
+        self._topk: Dict[int, Tuple[np.ndarray, np.ndarray, int]] = {}
+        self._clock = 0
+        self.evictions = 0
+
+    # -- slot map ----------------------------------------------------------
+
+    @property
+    def pad_row(self) -> int:
+        return self.max_users
+
+    @property
+    def slots_used(self) -> int:
+        return self.max_users - len(self._free)
+
+    def slot_of(self, user: int) -> Optional[int]:
+        return self._slot_of.get(int(user))
+
+    def take_evicted(self, user: int) -> bool:
+        """One-shot handshake: True exactly once after ``user`` was evicted
+        — the caller must answer with a full-history re-seed."""
+        user = int(user)
+        if user in self._evicted:
+            self._evicted.discard(user)
+            return True
+        return False
+
+    def touch(self, slot: int) -> None:
+        self._clock += 1
+        self.last_used[slot] = self._clock
+
+    def alloc(self, user: int, *, evict: bool = True,
+              busy: Iterable[int] = ()) -> Optional[int]:
+        """Claim a slot for a new user: free list first, else (``evict``)
+        the least-recently-used idle slot not in ``busy``. Returns None
+        when nothing can be claimed (caller sheds the request)."""
+        user = int(user)
+        if user in self._slot_of:
+            raise ValueError(f"user {user} already resident")
+        if self._free:
+            slot = self._free.pop()
+        elif evict:
+            busy = set(busy)
+            order = np.argsort(self.last_used, kind="stable")
+            slot = next((int(s) for s in order if int(s) not in busy), None)
+            if slot is None:
+                return None
+            self.evict(slot)
+            self._free.pop()
+        else:
+            return None
+        self._slot_of[user] = slot
+        self.user[slot] = user
+        self.touch(slot)
+        return slot
+
+    def evict(self, slot: int) -> None:
+        """Drop the slot's user (host-side only — device rows become stale
+        garbage, which masked attention renders harmless)."""
+        old = int(self.user[slot])
+        if old >= 0:
+            self._slot_of.pop(old, None)
+            self._evicted.add(old)
+            self.evictions += 1
+        self.user[slot] = -1
+        self.length[slot] = 0
+        self.version[slot] = 0
+        self.enc_len[slot] = -1
+        self.enc_version[slot] = -1
+        self.needs_cold[slot] = False
+        self._topk.pop(slot, None)
+        self._free.append(slot)
+
+    def release(self, user: int) -> None:
+        """Graceful free (no evicted-handshake): the user just leaves."""
+        slot = self._slot_of.pop(int(user))
+        self.user[slot] = -1
+        self.length[slot] = 0
+        self.version[slot] = 0
+        self.enc_len[slot] = -1
+        self.enc_version[slot] = -1
+        self.needs_cold[slot] = False
+        self._topk.pop(slot, None)
+        self._free.append(slot)
+
+    # -- event state -------------------------------------------------------
+
+    def seed(self, slot: int, ids: np.ndarray, ts: np.ndarray) -> None:
+        """Install a full history into a freshly claimed slot (newest last;
+        only the last ``max_seq_len`` events are kept)."""
+        S = self.max_seq_len
+        ids = np.asarray(ids, np.int32)[-S:]
+        ts = np.asarray(ts, np.int32)[-S:]
+        n = ids.shape[0]
+        if n == 0:
+            raise ValueError("seed with empty history")
+        self.h_ids[slot, :n] = ids
+        self.h_ts[slot, :n] = ts
+        self.length[slot] = n
+        self.version[slot] += 1
+        self.needs_cold[slot] = True
+        self._topk.pop(slot, None)
+
+    def append(self, slot: int, ids: np.ndarray, ts: np.ndarray) -> None:
+        """Append new events to a live slot (ring semantics: keep the last
+        ``max_seq_len``). A wraparound/truncation invalidates the prefix —
+        the slot falls back to a cold full encode at the next tick."""
+        ids = np.asarray(ids, np.int32)
+        ts = np.asarray(ts, np.int32)
+        n = ids.shape[0]
+        if n == 0:
+            return
+        S = self.max_seq_len
+        L = int(self.length[slot])
+        total = L + n
+        if n >= S:
+            self.h_ids[slot] = ids[-S:]
+            self.h_ts[slot] = ts[-S:]
+            self.length[slot] = S
+            self.needs_cold[slot] = True
+        elif total > S:
+            drop = total - S
+            keep = L - drop
+            self.h_ids[slot, :keep] = self.h_ids[slot, drop:L]
+            self.h_ts[slot, :keep] = self.h_ts[slot, drop:L]
+            self.h_ids[slot, keep:] = ids
+            self.h_ts[slot, keep:] = ts
+            self.length[slot] = S
+            self.needs_cold[slot] = True
+        else:
+            self.h_ids[slot, L:total] = ids
+            self.h_ts[slot, L:total] = ts
+            self.length[slot] = total
+        self.version[slot] += 1
+        self._topk.pop(slot, None)
+
+    def pending_new(self, slot: int) -> int:
+        """Events appended since the device prefix was last encoded (only
+        meaningful when the slot is warm-eligible)."""
+        return int(self.length[slot]) - max(int(self.enc_len[slot]), 0)
+
+    def warm_eligible(self, slot: int, q_cap: int) -> bool:
+        """Warm iff the device prefix is valid and the bucketed append
+        window fits the row: ``enc_len + q_cap ≤ S`` guards the
+        dynamic_update_slice scatter against start-clamping."""
+        if self.kv_k is None or self.needs_cold[slot]:
+            return False
+        el = int(self.enc_len[slot])
+        if el <= 0 or int(self.enc_version[slot]) < 0:
+            return False
+        return el + q_cap <= self.max_seq_len
+
+    def mark_encoded(self, slot: int) -> None:
+        self.enc_len[slot] = self.length[slot]
+        self.enc_version[slot] = self.version[slot]
+        self.needs_cold[slot] = False
+
+    def emb_fresh(self, slot: int) -> bool:
+        return (int(self.enc_version[slot]) == int(self.version[slot])
+                and int(self.enc_len[slot]) == int(self.length[slot]))
+
+    # -- host top-k cache --------------------------------------------------
+
+    def store_topk(self, slot: int, ids: np.ndarray,
+                   scores: np.ndarray) -> None:
+        self._topk[slot] = (ids, scores, int(self.version[slot]))
+
+    def topk(self, slot: int) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        hit = self._topk.get(slot)
+        if hit is None or hit[2] != int(self.version[slot]):
+            return None
+        return hit[0], hit[1]
+
+    # -- accounting --------------------------------------------------------
+
+    @property
+    def device_bytes(self) -> int:
+        n = self.tokens.nbytes + self.timestamps.nbytes + self.emb.nbytes
+        if self.kv_k is not None:
+            n += self.kv_k.nbytes + self.kv_v.nbytes
+        return n
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "max_users": self.max_users,
+            "slots_used": self.slots_used,
+            "occupancy": self.slots_used / self.max_users,
+            "evictions": self.evictions,
+            "device_bytes": self.device_bytes,
+        }

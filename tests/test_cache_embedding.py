@@ -96,6 +96,62 @@ def test_defer_release_holds_single_pending_batch():
     assert (c.pins == 0).all()
 
 
+def test_row_sparse_writeback_reduces_bytes_bit_identically():
+    """Satellite: eviction writeback copies only the rows the batch's
+    sparse updates touched — the D2H byte count drops with touch sparsity
+    while the reassembled host master stays bit-identical."""
+    c, master = _mk_cache(vocab=96, chunk_rows=8, capacity=2)
+    c.warm_up(None)                         # chunks 0, 1 resident
+    win = c.init_window()
+    # batch touches 2 of chunk 0's 8 rows (+ 1 row of chunk 1)
+    touched = np.array([1, 5, 9])
+    c.prepare(0, touched)
+    # simulate the sparse landing: mutate exactly the touched window rows
+    rows = c.translate(touched)
+    new_vals = np.arange(rows.size * c.dim, dtype=np.float32
+                         ).reshape(rows.size, c.dim)
+    win = ET.ShadowedTable(
+        master=win.master.at[jnp.asarray(rows)].set(jnp.asarray(new_vals)),
+        shadow=win.shadow, accum=win.accum)
+    c.publish(win)
+    c.release(0, dirty=True)
+    # evict chunk 0 by preparing a batch needing both free-less slots
+    before = dict(c.counters())
+    c.prepare(1, np.array([16, 24]))        # chunks 2, 3 → evict 0 and 1
+    after = dict(c.counters())
+    # only the 3 touched rows crossed D2H, not 2 full chunks (16 rows)
+    assert after["writeback_rows_total"] - before["writeback_rows_total"] == 16
+    assert after["writeback_rows_dirty"] - before["writeback_rows_dirty"] == 3
+    row_bytes = 2 * c.dim * 4               # master + accum fp32
+    assert (after["swap_out_bytes"] - before["swap_out_bytes"]
+            == 3 * row_bytes)
+    # ...and the host master is exactly what a full-chunk writeback
+    # would have produced: touched rows updated, the rest untouched
+    want = master.copy()
+    want[touched] = new_vals
+    np.testing.assert_array_equal(c.host_master[:96], want)
+    c.release(1, dirty=False)
+
+
+def test_writeback_without_touch_record_is_whole_chunk():
+    """A dirty chunk with no recorded touch set (crash recovery) falls
+    back to conservative whole-chunk writeback."""
+    c, _ = _mk_cache(vocab=96, chunk_rows=8, capacity=2)
+    c.warm_up(None)
+    c.init_window()
+    c.prepare(0, np.array([1]))
+    c.release(0, dirty=True)
+    # keep chunk 1 hotter than chunk 0 so LFU picks the dirty chunk 0
+    c.prepare(5, np.array([8, 9, 10]))
+    c.release(5, dirty=False)
+    c.dirty_rows.clear()                    # lose the touch record
+    before = dict(c.counters())
+    c.prepare(1, np.array([16]))            # forces one eviction
+    after = dict(c.counters())
+    assert after["writeback_rows_dirty"] - before["writeback_rows_dirty"] == 8
+    c.release(1, dirty=False)
+
+
 def test_checkpoint_save_materializes_cache_nodes():
     """training.checkpoint flushes a cache node to the full host master
     (stripped shadow placeholder) — cached and uncached trees save
