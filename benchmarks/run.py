@@ -5,8 +5,11 @@
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
 """
 import argparse
+import glob
 import importlib
+import json
 import os
+import subprocess
 import sys
 import traceback
 
@@ -27,6 +30,7 @@ _ORDERED = [
     "benchmarks.bench_cache_embedding",
     "benchmarks.bench_serving",
     "benchmarks.bench_serving_stream",
+    "benchmarks.bench_observability",
 ]
 
 
@@ -41,6 +45,60 @@ def discover_modules():
 
 
 MODULES = discover_modules()
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _headline(payload, prefix: str = "", limit: int = 64) -> dict:
+    """Flatten a bench payload's numeric leaves (dot-joined paths) —
+    the machine-readable headline numbers; capped so a pathological
+    payload cannot bloat the summary."""
+    out = {}
+
+    def walk(node, path):
+        if len(out) >= limit:
+            return
+        if isinstance(node, dict):
+            for k in node:
+                walk(node[k], f"{path}.{k}" if path else str(k))
+        elif isinstance(node, bool):
+            out[path] = int(node)
+        elif isinstance(node, (int, float)):
+            out[path] = node
+    walk(payload, prefix)
+    return out
+
+
+def write_summary(out_dir: str = "") -> str:
+    """Aggregate every ``BENCH_*.json`` in ``out_dir`` (default:
+    $BENCH_JSON_DIR or cwd) into one ``BENCH_summary.json`` trajectory
+    file: bench name → headline numbers, plus the git rev. Returns the
+    summary path."""
+    out_dir = out_dir or os.environ.get("BENCH_JSON_DIR", "") or os.getcwd()
+    summary = {"git_rev": _git_rev(), "benches": {}}
+    for path in sorted(glob.glob(os.path.join(out_dir, "BENCH_*.json"))):
+        name = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        if name == "summary":
+            continue
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            continue
+        summary["benches"][name] = _headline(payload)
+    out_path = os.path.join(out_dir, "BENCH_summary.json")
+    with open(out_path, "w") as f:
+        json.dump(summary, f, indent=1, sort_keys=True)
+    return out_path
 
 
 def main() -> None:
@@ -58,6 +116,9 @@ def main() -> None:
         except Exception:
             failed.append(mod)
             traceback.print_exc()
+    # aggregate whatever BENCH_*.json exist so far (also under --only:
+    # sequential CI bench steps accumulate into one trajectory file)
+    print(f"# summary: {write_summary()}", flush=True)
     if failed:
         print(f"# FAILED: {failed}", file=sys.stderr)
         sys.exit(1)

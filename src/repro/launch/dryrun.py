@@ -277,15 +277,15 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     cfg = get_arch(arch)
     shape = SHAPES_BY_NAME[shape_name]
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
-    t0 = time.time()
+    t0 = time.perf_counter()
     jitted, args, arg_specs, plan, mesh = build_cell(arch, shape_name,
                                                      multi_pod)
     with shard_ctx(mesh, plan.rules):
         lowered = jitted.lower(*args)
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
 
     ma = compiled.memory_analysis()
     mem = {}

@@ -44,14 +44,14 @@ def main():
     meshes = {"single": ["single"], "multi": ["multi"],
               "both": ["single", "multi"]}[args.mesh]
     todo = [(a, s, m) for m in meshes for (a, s) in cells]
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i, (arch, shape, mesh) in enumerate(todo):
         tag = f"{arch}__{shape}__" + ("pod2x16x16" if mesh == "multi"
                                       else "pod16x16")
         path = os.path.join(args.out, tag + ".json")
         if os.path.exists(path):
             continue
-        print(f"[{i+1}/{len(todo)}] {tag} (t+{time.time()-t0:.0f}s)",
+        print(f"[{i+1}/{len(todo)}] {tag} (t+{time.perf_counter()-t0:.0f}s)",
               flush=True)
         cmd = [sys.executable, "-m", "repro.launch.dryrun",
                "--arch", arch, "--shape", shape, "--mesh", mesh,
@@ -63,7 +63,7 @@ def main():
             with open(path, "w") as f:
                 json.dump({"arch": arch, "shape": shape, "mesh": tag,
                            "ok": False, "error": "compile timeout"}, f)
-    print(f"done in {time.time()-t0:.0f}s")
+    print(f"done in {time.perf_counter()-t0:.0f}s")
 
 
 if __name__ == "__main__":

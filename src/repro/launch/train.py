@@ -75,6 +75,16 @@ def main():
     ap.add_argument("--lr", type=float, default=4e-3)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome/Perfetto trace_event JSON of the "
+                         "run (open in ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the final MetricsRegistry snapshot: "
+                         "*.prom gets Prometheus text exposition, "
+                         "anything else the nested-JSON snapshot()")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="print measured MFU / token imbalance / step "
+                         "wall time every N steps (0 = off; implies obs)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -119,16 +129,29 @@ def main():
         # capped at max_seq_len, so live pairs scale with rows, not cap².
         attn_fn = make_attn_fn(block=128, max_row_len=args.max_seq_len)
 
-    t0 = time.time()
+    # observability: any telemetry flag turns the obs layer on
+    obs = None
+    if args.trace_out or args.metrics_out or args.metrics_every:
+        from repro.obs import Obs
+        obs = Obs()
+
+    t0 = time.perf_counter()
     tally = {"tokens": 0}
 
     def on_step(i, rec, state):
         tally["tokens"] += rec["tokens"]
         if (i + 1) % args.log_every == 0:
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             print(f"step {i+1:5d}  loss {rec['loss']:.4f}  "
                   f"{tally['tokens']/dt:,.0f} tok/s  "
                   f"{(i+1)/dt:.2f} steps/s", flush=True)
+        if args.metrics_every and (i + 1) % args.metrics_every == 0:
+            # per-step derived gauges ride the record when obs is live
+            print(f"[obs] step {i+1:5d}  "
+                  f"mfu {100*rec.get('mfu', 0):.2f}%  "
+                  f"imbalance {100*rec.get('imbalance', 0):.2f}%  "
+                  f"step_wall {rec.get('step_wall_s', 0)*1e3:.1f}ms",
+                  flush=True)
 
     engine = GREngine(
         bundle, loader,
@@ -136,7 +159,7 @@ def main():
                          attn_fn=attn_fn),
         lr_dense=args.lr, lr_sparse=args.lr,
         semi_async=not args.no_semi_async, schedule=args.schedule,
-        seed=args.seed, step_callback=on_step)
+        seed=args.seed, step_callback=on_step, obs=obs)
     if args.ckpt_dir:
         # supervised loop: crash-consistent checkpoints + recovery
         # (training/resilience.py); a failed stage drains the pipeline,
@@ -186,8 +209,27 @@ def main():
           f"comm-not-overlapped "
           f"{100*r.get('comm_not_overlapped_ratio', 0):.2f}%  "
           f"free {100*r.get('free_ratio', 0):.1f}%")
+    if obs is not None:
+        gp = obs.snapshot().get("train_pipeline_goodput", {})
+        vals = gp.get("values", {})
+        if vals:
+            print(f"[obs] pipeline goodput {100*next(iter(vals.values())):.1f}%")
+        if args.trace_out:
+            obs.export_trace(args.trace_out)
+            print(f"[obs] wrote Perfetto trace to {args.trace_out} "
+                  f"({len(obs.tracer)} spans)")
+        if args.metrics_out:
+            if args.metrics_out.endswith(".prom"):
+                with open(args.metrics_out, "w") as f:
+                    f.write(obs.to_prometheus())
+            else:
+                import json
+                with open(args.metrics_out, "w") as f:
+                    json.dump(obs.snapshot(), f, indent=1)
+            print(f"[obs] wrote metrics snapshot to {args.metrics_out}")
     final = f"final loss {results[-1]['loss']:.4f}" if results else "no steps"
-    print(f"[done] {args.steps} steps in {time.time()-t0:.1f}s, {final}")
+    print(f"[done] {args.steps} steps in "
+          f"{time.perf_counter()-t0:.1f}s, {final}")
 
 
 if __name__ == "__main__":

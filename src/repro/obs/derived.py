@@ -1,0 +1,74 @@
+"""Derived gauges: measured MFU, token-load imbalance, pipeline goodput.
+
+These close the loop between the static roofline estimates in
+``launch/roofline.py`` and what a run actually did:
+
+- ``measured_mfu`` — model FLOPs per step over *measured* step wall
+  time against peak, reported next to the static roofline estimate
+  (paper's 54.71% MFU axis).
+- ``token_imbalance`` — makespan-relative imbalance of per-device
+  token loads (paper's 47% -> 2.4% axis), delegating to
+  ``core/load_balance.imbalance_ratio``.
+- ``pipeline_goodput`` — busy/wall ratio of the stage-event stream
+  (paper's 94%-NPU-utilization axis), with bubble ratio as the
+  complement.
+
+All guards: zero events / zero wall time / empty loads return zeros,
+never divide-by-zero.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, Mapping, Sequence, Tuple
+
+from repro.core import load_balance as LB
+from repro.core.pipeline import StageEvent
+from repro.launch.roofline import PEAK_FLOPS
+from repro.obs.trace import busy_from_intervals
+
+__all__ = ["measured_mfu", "token_imbalance", "pipeline_goodput"]
+
+
+def measured_mfu(model_flops: float, wall_s: float,
+                 peak_flops: float = PEAK_FLOPS) -> float:
+    """Measured model-FLOPs utilization for one step.
+
+    ``model_flops`` comes from ``roofline.model_flops_per_step`` (or
+    ``6 * n_dense_params * tokens`` for GR); ``wall_s`` is the measured
+    step wall time.  Returns 0.0 when either is non-positive.
+    """
+    if wall_s <= 0.0 or model_flops <= 0.0 or peak_flops <= 0.0:
+        return 0.0
+    return float(model_flops) / (float(wall_s) * float(peak_flops))
+
+
+def token_imbalance(loads: Sequence[float]) -> float:
+    """Makespan-relative token-load imbalance across devices.
+
+    ``(max - mean) / max`` over per-device token loads (e.g.
+    ``offsets[:, -1]`` from a jagged batch, i.e.
+    ``core/load_balance.assignment_token_loads`` output).  0.0 for
+    empty/zero loads or a single device.
+    """
+    loads = [float(x) for x in loads]
+    if len(loads) < 2 or max(loads) <= 0.0:
+        return 0.0
+    return float(LB.imbalance_ratio((), (), loads=loads))
+
+
+def pipeline_goodput(events: Iterable[StageEvent]) -> Dict[str, float]:
+    """Goodput / bubble ratio of a stage-event stream.
+
+    Busy time is the interval *union* across all stages (any stage
+    active counts as busy); wall is first-start to last-end.  Bubble
+    ratio is ``1 - goodput``.  Zero events -> all-zero dict.
+    """
+    ivs: list = [(ev.start, ev.end) for ev in events]
+    if not ivs:
+        return {"wall_s": 0.0, "busy_s": 0.0, "goodput": 0.0, "bubble_ratio": 0.0}
+    wall = max(e for _, e in ivs) - min(s for s, _ in ivs)
+    busy = busy_from_intervals(ivs)
+    if wall <= 0.0:
+        return {"wall_s": 0.0, "busy_s": busy, "goodput": 0.0, "bubble_ratio": 0.0}
+    goodput = busy / wall
+    return {"wall_s": wall, "busy_s": busy, "goodput": goodput,
+            "bubble_ratio": max(0.0, 1.0 - goodput)}

@@ -40,6 +40,8 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.embedding import tables as ET
 from repro.models import gr as GR
+from repro.obs import Obs
+from repro.obs.trace import NULL_SPAN
 from repro.serving import retrieval as RT
 from repro.serving.retrieval import ShardedTopK
 from repro.serving.scheduler import (Admission, ContinuousScheduler,
@@ -47,6 +49,18 @@ from repro.serving.scheduler import (Admission, ContinuousScheduler,
 from repro.serving.slot_buffer import (BucketLadder, CompileCache,
                                        SequenceBuffer)
 from repro.serving.state_cache import UserStateCache
+
+
+def _null_span(*args: Any, **kwargs: Any):
+    return NULL_SPAN
+
+
+def _obs_hooks(obs: Optional[Obs]):
+    """(span_fn, registry) for an engine: both no-ops when obs is absent
+    or disabled, so the uninstrumented path stays a constant lookup."""
+    if obs is not None and obs.enabled:
+        return obs.tracer.span, obs.metrics
+    return _null_span, None
 
 
 @dataclass
@@ -76,9 +90,12 @@ class RecallEngine:
                  k: int = 100, retrieval_block: int = 4096,
                  use_shadow: bool = True, max_delay_ms: float = 10.0,
                  attn_fn: Optional[Callable] = None,
-                 cache_users: Optional[int] = None):
+                 cache_users: Optional[int] = None,
+                 obs: Optional[Obs] = None):
         self.cfg = cfg
         self.dense = dense
+        self.obs = obs
+        self._span, self._mx = _obs_hooks(obs)
         if isinstance(table, ET.ShadowedTable):
             self.table = table
         else:
@@ -182,23 +199,25 @@ class RecallEngine:
             # copy: jax dispatch is async, so encode k+1 overlaps the
             # transfer of k instead of serializing behind it
             mbs = self.scheduler.flush(now)
-            outs = []
-            for mb in mbs:
-                outs.append(self._encode(
-                    self.dense, self.table.master,
-                    jnp.asarray(mb.ids), jnp.asarray(mb.offsets),
-                    jnp.asarray(mb.timestamps), jnp.asarray(mb.last_pos)))
-                self.encoded_batches += 1
-            for mb, out in zip(mbs, outs):
-                out = np.asarray(out)
-                for s in mb.slots:
-                    # copy, not view: caching a view would pin the whole
-                    # (G, S, d) batch buffer for as long as any one of
-                    # its users stays cached
-                    e = out[s.shard, s.row].copy()
-                    ver = self._snap_version.pop(s.rid, None)
-                    self.cache.store(s.user, e, ver)
-                    pending.append((s.rid, s.user, False, e, ver))
+            with self._span("encode", "serve_encode", batches=len(mbs)):
+                outs = []
+                for mb in mbs:
+                    outs.append(self._encode(
+                        self.dense, self.table.master,
+                        jnp.asarray(mb.ids), jnp.asarray(mb.offsets),
+                        jnp.asarray(mb.timestamps),
+                        jnp.asarray(mb.last_pos)))
+                    self.encoded_batches += 1
+                for mb, out in zip(mbs, outs):
+                    out = np.asarray(out)
+                    for s in mb.slots:
+                        # copy, not view: caching a view would pin the
+                        # whole (G, S, d) batch buffer for as long as any
+                        # one of its users stays cached
+                        e = out[s.shard, s.row].copy()
+                        ver = self._snap_version.pop(s.rid, None)
+                        self.cache.store(s.user, e, ver)
+                        pending.append((s.rid, s.user, False, e, ver))
         for rid, user, emb, topk, ver in self._hits:
             if topk is not None:
                 # hand the caller copies — these arrays live in the cache,
@@ -217,13 +236,14 @@ class RecallEngine:
 
         if pending:
             B = len(pending)
-            d = pending[0][3].shape[-1]
-            E = np.zeros((_bucket(B), d), np.float32)
-            E[:B] = np.stack([p[3] for p in pending]).astype(np.float32)
-            vals, idx = self.retriever(self.table, jnp.asarray(E))
-            self.retrieval_batches += 1
-            vals = np.asarray(vals[:B])
-            idx = np.asarray(idx[:B])
+            with self._span("retrieval", "serve_rank", batch=B):
+                d = pending[0][3].shape[-1]
+                E = np.zeros((_bucket(B), d), np.float32)
+                E[:B] = np.stack([p[3] for p in pending]).astype(np.float32)
+                vals, idx = self.retriever(self.table, jnp.asarray(E))
+                self.retrieval_batches += 1
+                vals = np.asarray(vals[:B])
+                idx = np.asarray(idx[:B])
             for i, (rid, user, hit, emb, ver) in enumerate(pending):
                 self.cache.store_topk(user, idx[i], vals[i], ver)
                 # emb is the cached object — results get their own copy
@@ -286,6 +306,10 @@ class RecallEngine:
                "encoded_batches": self.encoded_batches,
                "retrieval_table_dtype":
                    str(self.retriever.scan_table(self.table).dtype)}
+        if self._mx is not None:
+            # mirror into the registry; the dict itself is returned
+            # unchanged (thin-view contract for existing callers)
+            self._mx.publish("serve", out)
         return out
 
 
@@ -337,11 +361,14 @@ class StreamingRecallEngine:
                  queue_limit: Optional[int] = None,
                  admission: str = "evict",
                  prefix_reuse: bool = True,
-                 attn_fn: Optional[Callable] = None):
+                 attn_fn: Optional[Callable] = None,
+                 obs: Optional[Obs] = None):
         if admission not in ("evict", "shed"):
             raise ValueError(f"admission policy {admission!r}")
         self.cfg = cfg
         self.dense = dense
+        self.obs = obs
+        self._span, self._mx = _obs_hooks(obs)
         if isinstance(table, ET.ShadowedTable):
             self.table = table
         else:
@@ -556,6 +583,10 @@ class StreamingRecallEngine:
         """Run one continuous-batching step: form a budget-bounded tick,
         encode its cold and warm rows, rank every finished slot from the
         device embedding buffer, and return results in rid order."""
+        with self._span("tick", "serve"):
+            return self._tick(now=now)
+
+    def _tick(self, *, now: Optional[float] = None) -> List[ServeResult]:
         now = time.monotonic() if now is None else now
         results: List[ServeResult] = []
         for rid, user, slot, (tids, tscores) in self._ready:
@@ -597,6 +628,10 @@ class StreamingRecallEngine:
         return results
 
     def _run_cold(self, items: List[Tuple[int, List[int]]]) -> None:
+        with self._span("encode_cold", "serve_encode", rows=len(items)):
+            self._run_cold_impl(items)
+
+    def _run_cold_impl(self, items: List[Tuple[int, List[int]]]) -> None:
         slots = [s for s, _ in items]
         R = self.row_ladder.bucket(len(slots))
         S = self.buffer.max_seq_len
@@ -629,6 +664,12 @@ class StreamingRecallEngine:
 
     def _run_warm(self, items: List[Tuple[int, List[int]]],
                   q_cap: int) -> None:
+        with self._span("encode_warm", "serve_encode",
+                        rows=len(items), q_cap=q_cap):
+            self._run_warm_impl(items, q_cap)
+
+    def _run_warm_impl(self, items: List[Tuple[int, List[int]]],
+                       q_cap: int) -> None:
         slots = [s for s, _ in items]
         R = self.row_ladder.bucket(len(slots))
         rows = np.full(R, self.buffer.pad_row, np.int32)
@@ -661,6 +702,11 @@ class StreamingRecallEngine:
               ) -> List[ServeResult]:
         """Rank finished slots straight from the device embedding buffer,
         in row-ladder-bounded bucketed chunks."""
+        with self._span("rank", "serve_rank", slots=len(items)):
+            return self._rank_impl(items)
+
+    def _rank_impl(self, items: List[Tuple[int, List[int], bool]]
+                   ) -> List[ServeResult]:
         results: List[ServeResult] = []
         scan = self.retriever.scan_table(self.table)
         cap = self.row_ladder.max_size
@@ -714,7 +760,7 @@ class StreamingRecallEngine:
         return out
 
     def stats(self) -> Dict[str, Any]:
-        return {
+        out = {
             "latency": self.sched.latency_stats(),
             "admission": dict(self.sched.outcomes),
             "occupancy": {**self.sched.occupancy(), **self.buffer.stats()},
@@ -728,3 +774,8 @@ class StreamingRecallEngine:
             "retrieval_table_dtype":
                 str(self.retriever.scan_table(self.table).dtype),
         }
+        if self._mx is not None:
+            # mirror into the registry; the dict itself is returned
+            # unchanged (thin-view contract for existing callers)
+            self._mx.publish("serve", out)
+        return out

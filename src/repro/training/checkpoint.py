@@ -31,6 +31,7 @@ import re
 import shutil
 import tempfile
 import threading
+import time
 import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -48,6 +49,20 @@ _STEP_RE = re.compile(r"^step_(\d+)$")
 class CheckpointCorrupt(RuntimeError):
     """A step directory failed integrity verification (missing file,
     truncated leaf, CRC mismatch, unreadable manifest)."""
+
+
+def _record_duration(registry: Any, name: str, seconds: float) -> None:
+    """Publish one save/restore duration into an obs MetricsRegistry.
+
+    Duck-typed so this module never imports ``repro.obs`` (checkpointing
+    sits below observability in the layering); any object with the
+    registry's ``histogram``/``gauge``/``counter`` surface works."""
+    if registry is None:
+        return
+    registry.histogram(name + "_s",
+                       "checkpoint duration").observe(seconds)
+    registry.gauge(name + "_last_s").set(seconds)
+    registry.counter(name + "s_total").inc()
 
 
 def _leaves_with_paths(tree: Any):
@@ -118,7 +133,8 @@ def _fsync_path(path: str) -> None:
 
 def save(ckpt_dir: str, step: int, tree: Any,
          meta: Optional[Dict] = None,
-         keep_last_n: Optional[int] = None) -> str:
+         keep_last_n: Optional[int] = None,
+         registry: Any = None) -> str:
     """Synchronous atomic + durable save. Returns the step directory.
 
     Every ``arr_*.npy`` and the manifest are fsync'd, then the tmp
@@ -131,8 +147,11 @@ def save(ckpt_dir: str, step: int, tree: Any,
     ShadowedTable nodes are saved with a 0-row shadow placeholder —
     checkpoints never double-store what ``restore`` rebuilds from the
     master. ``keep_last_n`` (≥1) garbage-collects older ``step_*``
-    directories after the new step is durably published.
+    directories after the new step is durably published. ``registry``
+    (optional, duck-typed obs ``MetricsRegistry``) records the save
+    duration as ``ckpt_save_s``.
     """
+    _t0 = time.perf_counter()
     os.makedirs(ckpt_dir, exist_ok=True)
     tree = _strip_shadows(_materialize_caches(tree))
     flat, treedef = _leaves_with_paths(tree)
@@ -180,6 +199,7 @@ def save(ckpt_dir: str, step: int, tree: Any,
     _fsync_path(ckpt_dir)
     if keep_last_n is not None:
         gc_steps(ckpt_dir, keep_last_n)
+    _record_duration(registry, "ckpt_save", time.perf_counter() - _t0)
     return final
 
 
@@ -202,9 +222,11 @@ def gc_steps(ckpt_dir: str, keep_last_n: int) -> List[int]:
 class AsyncCheckpointer:
     """Snapshot-then-write-in-background saver; one save in flight."""
 
-    def __init__(self, ckpt_dir: str, keep_last_n: Optional[int] = None):
+    def __init__(self, ckpt_dir: str, keep_last_n: Optional[int] = None,
+                 registry: Any = None):
         self.ckpt_dir = ckpt_dir
         self.keep_last_n = keep_last_n
+        self.registry = registry
         self._thread: Optional[threading.Thread] = None
         self.last_error: Optional[BaseException] = None
 
@@ -220,7 +242,8 @@ class AsyncCheckpointer:
         def work():
             try:
                 save(self.ckpt_dir, step, host_tree, meta,
-                     keep_last_n=self.keep_last_n)
+                     keep_last_n=self.keep_last_n,
+                     registry=self.registry)
             except BaseException as e:      # surfaced on next wait()
                 self.last_error = e
 
@@ -343,7 +366,7 @@ def _load_step_arrays(ckpt_dir: str, step: int, num_leaves: int,
 
 def restore(ckpt_dir: str, template: Any, step: Optional[int] = None,
             shardings: Optional[Any] = None, verify: bool = True,
-            fallback: bool = True) -> Any:
+            fallback: bool = True, registry: Any = None) -> Any:
     """Verified restore into ``template``'s structure.
 
     Every leaf is CRC-checked against the manifest; when ``step`` is None
@@ -356,16 +379,19 @@ def restore(ckpt_dir: str, template: Any, step: Optional[int] = None,
     master."""
     tree, _ = restore_with_step(ckpt_dir, template, step=step,
                                 shardings=shardings, verify=verify,
-                                fallback=fallback)
+                                fallback=fallback, registry=registry)
     return tree
 
 
 def restore_with_step(ckpt_dir: str, template: Any,
                       step: Optional[int] = None,
                       shardings: Optional[Any] = None, verify: bool = True,
-                      fallback: bool = True) -> Tuple[Any, int]:
+                      fallback: bool = True,
+                      registry: Any = None) -> Tuple[Any, int]:
     """:func:`restore` + the step number actually restored (which may be
-    older than ``latest_step`` when fallback skipped corrupt saves)."""
+    older than ``latest_step`` when fallback skipped corrupt saves).
+    ``registry`` records the restore duration as ``ckpt_restore_s``."""
+    _t0 = time.perf_counter()
     flat_t, treedef = jax.tree_util.tree_flatten(template)
     if step is not None:
         candidates = [step]
@@ -402,4 +428,5 @@ def restore_with_step(ckpt_dir: str, template: Any,
     else:
         out = [jnp.asarray(a).astype(t.dtype) for a, t in zip(arrs, flat_t)]
     tree = _rebuild_shadows(jax.tree_util.tree_unflatten(treedef, out))
+    _record_duration(registry, "ckpt_restore", time.perf_counter() - _t0)
     return tree, used
