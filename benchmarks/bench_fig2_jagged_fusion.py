@@ -76,7 +76,9 @@ def kernel_schedule_comparison():
                                max_row_len=max_len)
         nb = plan.num_blocks
         dense_steps = nb * nb
-        wl_steps = plan.num_pairs
+        # actual grid steps: num_pairs / pairs_per_step (tuned.json may
+        # group several work-list entries per step for this regime)
+        wl_steps = plan.num_steps
         live = int(plan.n_live[0])
 
         fns = {}
@@ -94,6 +96,8 @@ def kernel_schedule_comparison():
             "capacity": int(cap), "block": block, "nb": int(nb),
             "grid_steps_dense": int(dense_steps),
             "grid_steps_worklist": int(wl_steps),
+            "worklist_pairs": int(plan.num_pairs),
+            "tuning_config": {"pairs_per_step": int(plan.pairs_per_step)},
             "live_pairs": live,
             "live_block_ratio": live / dense_steps,
             "grid_reduction": dense_steps / wl_steps,

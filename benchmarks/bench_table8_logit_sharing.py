@@ -17,8 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
 from repro.configs import ARCHS, reduced
+from repro.kernels import autotune
 from repro.data.kuairand import preprocess_log
 from repro.data.loader import GRLoader
 from repro.data.synthetic import SyntheticKuaiRand
@@ -64,6 +65,7 @@ def main():
     cfg = reduced(ARCHS["fuxi-tiny"]).replace(vocab_size=n_items,
                                               max_seq_len=64)
     rows = {}
+    json_rows = {}
     for tag, R, k in (("full_R32", 32, 1),
                       ("half_R16_unshared", 16, 1),
                       ("half_R16_shared_k2", 16, 2)):
@@ -71,12 +73,29 @@ def main():
         hr = hr_at_k(state.dense, state.table.master,
                      cfg.replace(num_negatives=R), seqs, test, k=100)
         rows[tag] = (loss, hr)
+        # active tuning config for the fused loss's shape regime
+        # (tokens/step = 2 devices x 4 users x 64 seq, neg_segment=64)
+        tdims = {"segment": 64, "R": R, "D": cfg.d_model, "T": 512,
+                 "expansion": k}
+        json_rows[tag] = {
+            "loss": loss, "hr_at_100": hr, "lookups_per_token": R,
+            "expansion": k, "train_step_peak_temp_bytes": peak,
+            "tuning_config": {
+                "bucket": autotune.shape_bucket(tdims),
+                "rows_per_step": autotune.resolve(
+                    "neg_fused", tdims, "rows_per_step"),
+                "scatter_impl": autotune.resolve(
+                    "neg_fused", tdims, "scatter_impl"),
+            },
+        }
         emit(f"table8_logit_sharing.{tag}", 0.0,
              f"loss={loss:.4f} HR@100={hr:.4f} lookups_per_token={R} "
              f"train_step_peak_temp_bytes={peak}")
     full, half, shared = (rows[t][1] for t in
                           ("full_R32", "half_R16_unshared",
                            "half_R16_shared_k2"))
+    write_bench_json("table8_logit_sharing", {
+        "bench": "logit_sharing", "rows": json_rows})
     emit("table8_logit_sharing.verdict", 0.0,
          f"shared(k=2,R16) HR={shared:.4f} vs full(R32) {full:.4f} vs "
          f"half-unshared {half:.4f} — sharing recovers full-R quality "

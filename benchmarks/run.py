@@ -31,6 +31,7 @@ _ORDERED = [
     "benchmarks.bench_serving",
     "benchmarks.bench_serving_stream",
     "benchmarks.bench_observability",
+    "benchmarks.bench_kernels",
 ]
 
 

@@ -289,6 +289,8 @@ def fused_sampled_softmax_loss(out_emb: jax.Array, pos_emb: jax.Array,
                                fetch_dtype=jnp.float16,
                                shadow: Optional[jax.Array] = None,
                                impl: Optional[str] = None,
+                               rows_per_step: Optional[int] = None,
+                               scatter_impl: Optional[str] = None,
                                interpret: Optional[bool] = None
                                ) -> jax.Array:
     """Eq. 2 straight from ids: the production recall loss.
@@ -303,6 +305,10 @@ def fused_sampled_softmax_loss(out_emb: jax.Array, pos_emb: jax.Array,
     ``table``. When None, ``fetch_dtype`` rounds fp32 master rows at the
     fetch instead (same numerics under the shadow invariant, full
     bandwidth).
+
+    ``rows_per_step`` / ``scatter_impl`` tune the Pallas megakernel's
+    gather batching and backward-scatter schedule (kernels/autotune.py
+    resolves tuned.json defaults when None; ignored by the XLA impl).
     """
     if impl is None:
         impl = "pallas" if jax.default_backend() == "tpu" else "xla"
@@ -312,6 +318,8 @@ def fused_sampled_softmax_loss(out_emb: jax.Array, pos_emb: jax.Array,
               valid=valid, fetch_dtype=fetch_dtype, gather_table=shadow)
     if impl == "pallas":
         lse = fused_recall_lse(out_emb, pos, table, neg_ids,
+                               rows_per_step=rows_per_step,
+                               scatter_impl=scatter_impl,
                                interpret=interpret, **kw)
     elif impl == "xla":
         lse = fused_recall_lse_xla(out_emb, pos, table, neg_ids, **kw)

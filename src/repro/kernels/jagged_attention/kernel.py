@@ -43,8 +43,16 @@ capacity². Work-list layout and visit-flag protocol:
     owns one contiguous (variable-length) run of grid steps;
   * entries past the live count ``n_live`` (the list is padded to a static
     bound) replicate the *last* live pair — consecutive identical block
-    ids cost no new DMA, the ``p < n_live`` guard skips their compute, and
+    ids cost no new DMA, the per-entry live mask skips their compute, and
     the destination run simply extends through the tail;
+  * with ``pairs_per_step`` (pps) > 1 each grid step consumes pps
+    consecutive list entries: every run is padded to a pps multiple with
+    dead entries replicating the run's last live pair (ops.py), the
+    varying-side blocks ride in as pps separate BlockSpec windows (one
+    per slot, each indexed by its own scalar-prefetched pair id — a
+    repeated id is the same block index, so Pallas elides the copy), and
+    slots accumulate sequentially in list order — bitwise identical to
+    pps=1 for every setting;
   * per-step ``(first, last)`` visit flags — computed over the padded list
     by comparing neighbouring destinations — replace the dense grid's
     ``j == 0`` accumulator reset and ``j == nb−1`` flush: the accumulator
@@ -65,6 +73,21 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.jagged import NEG_SEG  # canonical padding segment id (-1)
+from repro.kernels import autotune
+
+
+def _attn_cost(block, H, D, num_pairs, nb, pps, *, factor=1.0):
+    """pl.CostEstimate kwargs for an attention kernel launch (honest
+    FLOPs/bytes for XLA's scheduler; ``factor`` ~doubles the backward)."""
+    c = autotune.estimate_cost(
+        "attn_worklist",
+        {"block": block, "H": H, "D": D, "num_pairs": num_pairs,
+         "num_blocks": nb},
+        {"pairs_per_step": pps})
+    return autotune.pallas_cost(
+        flops=factor * c["flops"],
+        bytes_accessed=factor * c["bytes_accessed"],
+        transcendentals=factor * c["transcendentals"])
 
 
 def _silu(x):
@@ -269,28 +292,38 @@ def _fwd_kernel(seg_rng_ref,                      # scalar prefetch (nb, 2)
         out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
 
-def _fwd_kernel_wl(wq_ref, wk_ref, flg_ref, nlive_ref,    # scalar prefetch
-                   qmi_ref, qmf_ref, kmi_ref, kmf_ref,
-                   q_ref, k_ref, v_ref, pt_ref, tt_ref,
-                   out_ref, acc_ref, *,
-                   bq, bk, H, D, scale, npb, ntb, tb_scale,
+def _fwd_kernel_wl(wq_ref, wk_ref, flg_ref, live_ref, nlive_ref,  # prefetch
+                   *refs,
+                   bq, bk, pps, H, D, scale, npb, ntb, tb_scale,
                    use_pos, use_time, causal, time_functional=False):
-    """Work-list forward: grid (P,) over live (qb, kb) pairs, q-major."""
+    """Work-list forward: grid (S,), ``pps`` live (qb, kb) pairs per step,
+    q-major. The k-side blocks arrive as pps per-slot windows; slots
+    accumulate sequentially in list order (bitwise-equal to pps=1)."""
+    qmi_ref, qmf_ref = refs[0], refs[1]
+    kmi_refs = refs[2:2 + pps]
+    q_ref = refs[2 + pps]
+    k_refs = refs[3 + pps:3 + 2 * pps]
+    v_refs = refs[3 + 2 * pps:3 + 3 * pps]
+    pt_ref, tt_ref = refs[3 + 3 * pps], refs[4 + 3 * pps]
+    out_ref, acc_ref = refs[5 + 3 * pps], refs[6 + 3 * pps]
     p = pl.program_id(0)
 
     @pl.when(flg_ref[p, 0] == 1)
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    @pl.when(p < nlive_ref[0])
-    def _compute():
-        _fwd_block_compute(wq_ref[p] * bq, wk_ref[p] * bk,
-                           qmi_ref, qmf_ref, kmi_ref,
-                           q_ref, k_ref, v_ref, pt_ref, tt_ref, acc_ref,
-                           bq=bq, bk=bk, H=H, scale=scale, npb=npb,
-                           ntb=ntb, tb_scale=tb_scale, use_pos=use_pos,
-                           use_time=use_time, causal=causal,
-                           time_functional=time_functional)
+    i0 = wq_ref[p * pps] * bq     # destination: constant across the step
+    for u in range(pps):
+        @pl.when(live_ref[p * pps + u] == 1)
+        def _compute(u=u):
+            _fwd_block_compute(i0, wk_ref[p * pps + u] * bk,
+                               qmi_ref, qmf_ref, kmi_refs[u],
+                               q_ref, k_refs[u], v_refs[u], pt_ref, tt_ref,
+                               acc_ref, bq=bq, bk=bk, H=H, scale=scale,
+                               npb=npb, ntb=ntb, tb_scale=tb_scale,
+                               use_pos=use_pos, use_time=use_time,
+                               causal=causal,
+                               time_functional=time_functional)
 
     @pl.when(flg_ref[p, 1] == 1)
     def _write():
@@ -335,59 +368,77 @@ def fwd_pallas(q, k, v, pos_table, time_table, meta_i32, meta_f32, seg_rng,
         kern, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((cap, H, D), v.dtype),
         interpret=interpret,
+        **_attn_cost(block, H, D, nb * nb, nb, 1),
     )(seg_rng, meta_i32, meta_f32, meta_i32, meta_f32, q, k, v,
       pos_table, time_table)
 
 
+def _wl_shape(wq, flags):
+    """(L, S, pps) of a grouped work-list; pps is static from the shapes."""
+    L, S = wq.shape[0], flags.shape[0]
+    pps = L // S
+    assert S * pps == L, (L, S)
+    return L, S, pps
+
+
 def fwd_pallas_wl(q, k, v, pos_table, time_table, meta_i32, meta_f32,
-                  wq, wk, flags, n_live,
+                  wq, wk, flags, live, n_live,
                   *, block: int, scale: float, tb_scale: float,
                   use_pos: bool, use_time: bool, causal: bool = True,
                   time_functional: bool = False, interpret: bool = False):
-    """Forward over a compacted work-list (wq, wk): (P,) int32 pair ids,
-    flags (P, 2) int32 first/last-visit markers, n_live (1,) int32."""
+    """Forward over a compacted work-list (wq, wk): (L,) int32 pair ids,
+    flags (S, 2) int32 first/last-step markers, live (L,) int32 per-entry
+    mask, n_live (1,) int32. pps = L // S entries per grid step."""
     cap, H, D = q.shape
     npb = pos_table.shape[0]
     ntb = time_table.shape[0]
     assert cap % block == 0
     bq = bk = block
-    P = wq.shape[0]
+    nb = cap // block
+    L, S, pps = _wl_shape(wq, flags)
 
     kern = functools.partial(
-        _fwd_kernel_wl, bq=bq, bk=bk, H=H, D=D, scale=scale,
+        _fwd_kernel_wl, bq=bq, bk=bk, pps=pps, H=H, D=D, scale=scale,
         npb=npb, ntb=ntb, tb_scale=tb_scale,
         use_pos=use_pos, use_time=use_time, causal=causal,
         time_functional=time_functional)
 
-    def at_q(p, wq, wk, flg, nl):
-        return (wq[p], 0)
+    def at_q(p, wq, wk, flg, live, nl):
+        return (wq[p * pps], 0)
 
-    def at_k(p, wq, wk, flg, nl):
-        return (wk[p], 0)
+    def at_q3(p, wq, wk, flg, live, nl):
+        return (wq[p * pps], 0, 0)
+
+    def at_k(u):
+        return lambda p, wq, wk, flg, live, nl, u=u: (wk[p * pps + u], 0)
+
+    def at_k3(u):
+        return lambda p, wq, wk, flg, live, nl, u=u: (wk[p * pps + u], 0, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
-        grid=(P,),
+        num_scalar_prefetch=5,
+        grid=(S,),
         in_specs=[
             pl.BlockSpec((bq, 3), at_q),                       # q meta i32
             pl.BlockSpec((bq, 1), at_q),                       # q meta f32
-            pl.BlockSpec((bk, 3), at_k),                       # k meta i32
-            pl.BlockSpec((bk, 1), at_k),                       # k meta f32
-            pl.BlockSpec((bq, H, D), lambda p, wq, *_: (wq[p], 0, 0)),
-            pl.BlockSpec((bk, H, D), lambda p, wq, wk, *_: (wk[p], 0, 0)),
-            pl.BlockSpec((bk, H, D), lambda p, wq, wk, *_: (wk[p], 0, 0)),
+            *[pl.BlockSpec((bk, 3), at_k(u)) for u in range(pps)],
+            pl.BlockSpec((bq, H, D), at_q3),
+            *[pl.BlockSpec((bk, H, D), at_k3(u)) for u in range(pps)],
+            *[pl.BlockSpec((bk, H, D), at_k3(u)) for u in range(pps)],
             pl.BlockSpec((npb, H), lambda p, *_: (0, 0)),
             pl.BlockSpec((ntb, H), lambda p, *_: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((bq, H, D), lambda p, wq, *_: (wq[p], 0, 0)),
+        out_specs=pl.BlockSpec((bq, H, D), at_q3),
         scratch_shapes=[pltpu.VMEM((bq, H, D), jnp.float32)],
     )
     return pl.pallas_call(
         kern, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((cap, H, D), v.dtype),
         interpret=interpret,
-    )(wq, wk, flags, n_live, meta_i32, meta_f32, meta_i32, meta_f32,
-      q, k, v, pos_table, time_table)
+        **_attn_cost(block, H, D, L, nb, pps),
+    )(wq, wk, flags, live, n_live, meta_i32, meta_f32,
+      *([meta_i32] * pps), q, *([k] * pps), *([v] * pps),
+      pos_table, time_table)
 
 
 # --------------------------------------------------------------------------
@@ -479,14 +530,21 @@ def _bwd_kv_kernel(seg_rng_ref,
         dv_ref[...] = dv_acc[...].astype(dv_ref.dtype)
 
 
-def _bwd_kv_kernel_wl(wq_ref, wk_ref, flg_ref, nlive_ref,
-                      kmi_ref, kmf_ref, qmi_ref, qmf_ref,
-                      k_ref, v_ref, q_ref, dy_ref, pt_ref, tt_ref,
-                      dk_ref, dv_ref, dk_acc, dv_acc, *,
-                      bq, bk, H, D, scale, npb, ntb, tb_scale,
+def _bwd_kv_kernel_wl(wq_ref, wk_ref, flg_ref, live_ref, nlive_ref,
+                      *refs,
+                      bq, bk, pps, H, D, scale, npb, ntb, tb_scale,
                       use_pos, use_time, causal, time_functional=False):
-    """Work-list (dk, dv): grid (P,) over live pairs sorted k-block-major;
-    flags mark the first/last visit of each k-block run."""
+    """Work-list (dk, dv): grid (S,), ``pps`` pairs per step, sorted
+    k-block-major; flags mark the first/last step of each k-block run.
+    The q-side (varying) blocks arrive as pps per-slot windows."""
+    kmi_ref = refs[0]
+    qmi_refs = refs[1:1 + pps]
+    qmf_refs = refs[1 + pps:1 + 2 * pps]
+    k_ref, v_ref = refs[1 + 2 * pps], refs[2 + 2 * pps]
+    q_refs = refs[3 + 2 * pps:3 + 3 * pps]
+    dy_refs = refs[3 + 3 * pps:3 + 4 * pps]
+    pt_ref, tt_ref = refs[3 + 4 * pps], refs[4 + 4 * pps]
+    dk_ref, dv_ref, dk_acc, dv_acc = refs[5 + 4 * pps:9 + 4 * pps]
     p = pl.program_id(0)
 
     @pl.when(flg_ref[p, 0] == 1)
@@ -494,15 +552,19 @@ def _bwd_kv_kernel_wl(wq_ref, wk_ref, flg_ref, nlive_ref,
         dk_acc[...] = jnp.zeros_like(dk_acc)
         dv_acc[...] = jnp.zeros_like(dv_acc)
 
-    @pl.when(p < nlive_ref[0])
-    def _compute():
-        _kv_block_compute(wq_ref[p] * bq, wk_ref[p] * bk,
-                          qmi_ref, qmf_ref, kmi_ref,
-                          k_ref, v_ref, q_ref, dy_ref, pt_ref, tt_ref,
-                          dk_acc, dv_acc, bq=bq, bk=bk, H=H, scale=scale,
-                          npb=npb, ntb=ntb, tb_scale=tb_scale,
-                          use_pos=use_pos, use_time=use_time, causal=causal,
-                          time_functional=time_functional)
+    j0 = wk_ref[p * pps] * bk     # destination: constant across the step
+    for u in range(pps):
+        @pl.when(live_ref[p * pps + u] == 1)
+        def _compute(u=u):
+            _kv_block_compute(wq_ref[p * pps + u] * bq, j0,
+                              qmi_refs[u], qmf_refs[u], kmi_ref,
+                              k_ref, v_ref, q_refs[u], dy_refs[u],
+                              pt_ref, tt_ref, dk_acc, dv_acc,
+                              bq=bq, bk=bk, H=H, scale=scale,
+                              npb=npb, ntb=ntb, tb_scale=tb_scale,
+                              use_pos=use_pos, use_time=use_time,
+                              causal=causal,
+                              time_functional=time_functional)
 
     @pl.when(flg_ref[p, 1] == 1)
     def _write():
@@ -586,16 +648,21 @@ def _bwd_q_kernel(seg_rng_ref,
         dq_ref[...] = dq_acc[...].astype(dq_ref.dtype)
 
 
-def _bwd_q_kernel_wl(wq_ref, wk_ref, flg_ref, nlive_ref,
-                     qmi_ref, qmf_ref, kmi_ref, kmf_ref,
-                     q_ref, k_ref, v_ref, dy_ref, pt_ref, tt_ref,
-                     dq_ref, dpt_ref, dtt_ref, dq_acc, *,
-                     bq, bk, H, D, scale, npb, ntb, tb_scale,
+def _bwd_q_kernel_wl(wq_ref, wk_ref, flg_ref, live_ref, nlive_ref,
+                     *refs,
+                     bq, bk, pps, H, D, scale, npb, ntb, tb_scale,
                      use_pos, use_time, causal, time_functional=False):
-    """Work-list dq + RAB-table grads: grid (P,), q-block-major (the same
-    list as the forward). The RAB-table outputs have constant index maps,
-    so their VMEM windows persist across the whole grid — zero at p == 0,
-    flush once at the end."""
+    """Work-list dq + RAB-table grads: grid (S,), ``pps`` pairs per step,
+    q-block-major (the same list as the forward). The RAB-table outputs
+    have constant index maps, so their VMEM windows persist across the
+    whole grid — zero at p == 0, flush once at the end."""
+    qmi_ref, qmf_ref = refs[0], refs[1]
+    kmi_refs = refs[2:2 + pps]
+    q_ref, dy_ref = refs[2 + pps], refs[3 + pps]
+    k_refs = refs[4 + pps:4 + 2 * pps]
+    v_refs = refs[4 + 2 * pps:4 + 3 * pps]
+    pt_ref, tt_ref = refs[4 + 3 * pps], refs[5 + 3 * pps]
+    dq_ref, dpt_ref, dtt_ref, dq_acc = refs[6 + 3 * pps:10 + 3 * pps]
     p = pl.program_id(0)
 
     @pl.when(flg_ref[p, 0] == 1)
@@ -607,15 +674,19 @@ def _bwd_q_kernel_wl(wq_ref, wk_ref, flg_ref, nlive_ref,
         dpt_ref[...] = jnp.zeros_like(dpt_ref)
         dtt_ref[...] = jnp.zeros_like(dtt_ref)
 
-    @pl.when(p < nlive_ref[0])
-    def _compute():
-        _q_block_compute(wq_ref[p] * bq, wk_ref[p] * bk,
-                         qmi_ref, qmf_ref, kmi_ref,
-                         q_ref, k_ref, v_ref, dy_ref, pt_ref, tt_ref,
-                         dq_acc, dpt_ref, dtt_ref, bq=bq, bk=bk, H=H,
-                         scale=scale, npb=npb, ntb=ntb, tb_scale=tb_scale,
-                         use_pos=use_pos, use_time=use_time, causal=causal,
-                         time_functional=time_functional)
+    i0 = wq_ref[p * pps] * bq     # destination: constant across the step
+    for u in range(pps):
+        @pl.when(live_ref[p * pps + u] == 1)
+        def _compute(u=u):
+            _q_block_compute(i0, wk_ref[p * pps + u] * bk,
+                             qmi_ref, qmf_ref, kmi_refs[u],
+                             q_ref, k_refs[u], v_refs[u], dy_ref,
+                             pt_ref, tt_ref, dq_acc, dpt_ref, dtt_ref,
+                             bq=bq, bk=bk, H=H, scale=scale,
+                             npb=npb, ntb=ntb, tb_scale=tb_scale,
+                             use_pos=use_pos, use_time=use_time,
+                             causal=causal,
+                             time_functional=time_functional)
 
     @pl.when(flg_ref[p, 1] == 1)
     def _write():
@@ -664,6 +735,7 @@ def bwd_pallas(q, k, v, dy, pos_table, time_table, meta_i32, meta_f32,
         out_shape=[jax.ShapeDtypeStruct((cap, H, D), k.dtype),
                    jax.ShapeDtypeStruct((cap, H, D), v.dtype)],
         interpret=interpret,
+        **_attn_cost(block, H, D, nb * nb, nb, 1, factor=2.0),
     )(seg_rng, meta_i32, meta_f32, meta_i32, meta_f32, k, v, q, dy,
       pos_table, time_table)
 
@@ -700,60 +772,70 @@ def bwd_pallas(q, k, v, dy, pos_table, time_table, meta_i32, meta_f32,
                    jax.ShapeDtypeStruct((npb, H), jnp.float32),
                    jax.ShapeDtypeStruct((ntb, H), jnp.float32)],
         interpret=interpret,
+        **_attn_cost(block, H, D, nb * nb, nb, 1, factor=2.0),
     )(seg_rng, meta_i32, meta_f32, meta_i32, meta_f32, q, k, v, dy,
       pos_table, time_table)
     return dq, dk, dv, dpt, dtt
 
 
 def bwd_pallas_wl(q, k, v, dy, pos_table, time_table, meta_i32, meta_f32,
-                  q_wl, q_flags, kv_wl, kv_flags, n_live,
+                  q_wl, q_flags, q_live, kv_wl, kv_flags, kv_live, n_live,
                   *, block: int, scale: float, tb_scale: float,
                   use_pos: bool, use_time: bool, causal: bool = True,
                   time_functional: bool = False, interpret: bool = False):
     """Backward over compacted work-lists.
 
-    q_wl (P, 2): live pairs (qb, kb) in q-block-major order (the forward
-    list) with q_flags (P, 2) first/last per qb run — drives the dq kernel.
-    kv_wl (P, 2): the same pairs in k-block-major order with kv_flags per
-    kb run — drives the dk/dv kernel. n_live: (1,) int32.
+    q_wl (L, 2): live pairs (qb, kb) in q-block-major order (the forward
+    list) with q_flags (S, 2) first/last per qb run and q_live (L,) entry
+    mask — drives the dq kernel. kv_wl (L, 2): the same pairs in
+    k-block-major order with kv_flags/kv_live per kb run — drives the
+    dk/dv kernel. n_live: (1,) int32. pps = L // S entries per step.
     """
     cap, H, D = q.shape
     npb = pos_table.shape[0]
     ntb = time_table.shape[0]
     bq = bk = block
-    P = q_wl.shape[0]
+    nb = cap // block
+    L, S, pps = _wl_shape(q_wl[:, 0], q_flags)
     qi, qj = q_wl[:, 0], q_wl[:, 1]
     kvi, kvj = kv_wl[:, 0], kv_wl[:, 1]
 
-    def at_q(p, wq, wk, flg, nl):
-        return (wq[p], 0)
+    # first prefetch arg = qb ids, second = kb ids in BOTH kernels; the
+    # destination side is whichever is constant per run (kb for dk/dv)
+    def at_q(u):
+        return lambda p, wq, wk, flg, live, nl, u=u: (wq[p * pps + u], 0)
 
-    def at_k(p, wq, wk, flg, nl):
-        return (wk[p], 0)
+    def at_q3(u):
+        return lambda p, wq, wk, flg, live, nl, u=u: (wq[p * pps + u], 0, 0)
+
+    def at_k(u):
+        return lambda p, wq, wk, flg, live, nl, u=u: (wk[p * pps + u], 0)
+
+    def at_k3(u):
+        return lambda p, wq, wk, flg, live, nl, u=u: (wk[p * pps + u], 0, 0)
 
     kv_kern = functools.partial(
-        _bwd_kv_kernel_wl, bq=bq, bk=bk, H=H, D=D, scale=scale,
+        _bwd_kv_kernel_wl, bq=bq, bk=bk, pps=pps, H=H, D=D, scale=scale,
         npb=npb, ntb=ntb, tb_scale=tb_scale,
         use_pos=use_pos, use_time=use_time, causal=causal,
         time_functional=time_functional)
     kv_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
-        grid=(P,),
+        num_scalar_prefetch=5,
+        grid=(S,),
         in_specs=[
-            pl.BlockSpec((bk, 3), at_k),                        # k meta i32
-            pl.BlockSpec((bk, 1), at_k),                        # k meta f32
-            pl.BlockSpec((bq, 3), at_q),                        # q meta i32
-            pl.BlockSpec((bq, 1), at_q),                        # q meta f32
-            pl.BlockSpec((bk, H, D), lambda p, wq, wk, *_: (wk[p], 0, 0)),
-            pl.BlockSpec((bk, H, D), lambda p, wq, wk, *_: (wk[p], 0, 0)),
-            pl.BlockSpec((bq, H, D), lambda p, wq, *_: (wq[p], 0, 0)),
-            pl.BlockSpec((bq, H, D), lambda p, wq, *_: (wq[p], 0, 0)),
+            pl.BlockSpec((bk, 3), at_k(0)),                     # k meta i32
+            *[pl.BlockSpec((bq, 3), at_q(u)) for u in range(pps)],
+            *[pl.BlockSpec((bq, 1), at_q(u)) for u in range(pps)],
+            pl.BlockSpec((bk, H, D), at_k3(0)),                 # k
+            pl.BlockSpec((bk, H, D), at_k3(0)),                 # v
+            *[pl.BlockSpec((bq, H, D), at_q3(u)) for u in range(pps)],
+            *[pl.BlockSpec((bq, H, D), at_q3(u)) for u in range(pps)],
             pl.BlockSpec((npb, H), lambda p, *_: (0, 0)),
             pl.BlockSpec((ntb, H), lambda p, *_: (0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((bk, H, D), lambda p, wq, wk, *_: (wk[p], 0, 0)),
-            pl.BlockSpec((bk, H, D), lambda p, wq, wk, *_: (wk[p], 0, 0)),
+            pl.BlockSpec((bk, H, D), at_k3(0)),
+            pl.BlockSpec((bk, H, D), at_k3(0)),
         ],
         scratch_shapes=[pltpu.VMEM((bk, H, D), jnp.float32),
                         pltpu.VMEM((bk, H, D), jnp.float32)],
@@ -763,31 +845,32 @@ def bwd_pallas_wl(q, k, v, dy, pos_table, time_table, meta_i32, meta_f32,
         out_shape=[jax.ShapeDtypeStruct((cap, H, D), k.dtype),
                    jax.ShapeDtypeStruct((cap, H, D), v.dtype)],
         interpret=interpret,
-    )(kvi, kvj, kv_flags, n_live, meta_i32, meta_f32, meta_i32, meta_f32,
-      k, v, q, dy, pos_table, time_table)
+        **_attn_cost(block, H, D, L, nb, pps, factor=2.0),
+    )(kvi, kvj, kv_flags, kv_live, n_live, meta_i32,
+      *([meta_i32] * pps), *([meta_f32] * pps), k, v,
+      *([q] * pps), *([dy] * pps), pos_table, time_table)
 
     q_kern = functools.partial(
-        _bwd_q_kernel_wl, bq=bq, bk=bk, H=H, D=D, scale=scale,
+        _bwd_q_kernel_wl, bq=bq, bk=bk, pps=pps, H=H, D=D, scale=scale,
         npb=npb, ntb=ntb, tb_scale=tb_scale,
         use_pos=use_pos, use_time=use_time, causal=causal,
         time_functional=time_functional)
     q_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
-        grid=(P,),
+        num_scalar_prefetch=5,
+        grid=(S,),
         in_specs=[
-            pl.BlockSpec((bq, 3), at_q),
-            pl.BlockSpec((bq, 1), at_q),
-            pl.BlockSpec((bk, 3), at_k),
-            pl.BlockSpec((bk, 1), at_k),
-            pl.BlockSpec((bq, H, D), lambda p, wq, *_: (wq[p], 0, 0)),
-            pl.BlockSpec((bk, H, D), lambda p, wq, wk, *_: (wk[p], 0, 0)),
-            pl.BlockSpec((bk, H, D), lambda p, wq, wk, *_: (wk[p], 0, 0)),
-            pl.BlockSpec((bq, H, D), lambda p, wq, *_: (wq[p], 0, 0)),
+            pl.BlockSpec((bq, 3), at_q(0)),                     # q meta i32
+            pl.BlockSpec((bq, 1), at_q(0)),                     # q meta f32
+            *[pl.BlockSpec((bk, 3), at_k(u)) for u in range(pps)],
+            pl.BlockSpec((bq, H, D), at_q3(0)),                 # q
+            pl.BlockSpec((bq, H, D), at_q3(0)),                 # dy
+            *[pl.BlockSpec((bk, H, D), at_k3(u)) for u in range(pps)],
+            *[pl.BlockSpec((bk, H, D), at_k3(u)) for u in range(pps)],
             pl.BlockSpec((npb, H), lambda p, *_: (0, 0)),
             pl.BlockSpec((ntb, H), lambda p, *_: (0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((bq, H, D), lambda p, wq, *_: (wq[p], 0, 0)),
+            pl.BlockSpec((bq, H, D), at_q3(0)),
             pl.BlockSpec((npb, H), lambda p, *_: (0, 0)),
             pl.BlockSpec((ntb, H), lambda p, *_: (0, 0)),
         ],
@@ -799,6 +882,8 @@ def bwd_pallas_wl(q, k, v, dy, pos_table, time_table, meta_i32, meta_f32,
                    jax.ShapeDtypeStruct((npb, H), jnp.float32),
                    jax.ShapeDtypeStruct((ntb, H), jnp.float32)],
         interpret=interpret,
-    )(qi, qj, q_flags, n_live, meta_i32, meta_f32, meta_i32, meta_f32,
-      q, k, v, dy, pos_table, time_table)
+        **_attn_cost(block, H, D, L, nb, pps, factor=2.0),
+    )(qi, qj, q_flags, q_live, n_live, meta_i32, meta_f32,
+      *([meta_i32] * pps), q, dy, *([k] * pps), *([v] * pps),
+      pos_table, time_table)
     return dq, dk, dv, dpt, dtt

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.configs.base import RABConfig
 from repro.core.jagged import NEG_SEG
+from repro.kernels import autotune
 from repro.kernels.jagged_attention import kernel as K
 
 
@@ -97,18 +98,42 @@ def _live_block_matrix(seg_rng: jax.Array, block: int,
     return live
 
 
+def worklist_len(n_pairs: int, nb: int, pairs_per_step: int) -> int:
+    """Static padded list length L = S·pps for a grouped work-list.
+
+    Each destination run is padded to a ``pairs_per_step`` multiple (at
+    most nb runs waste pps−1 slots each), so S = ⌈(P + nb·(pps−1))/pps⌉
+    grid steps cover every layout the runtime live counts can take.
+    """
+    pps = max(int(pairs_per_step), 1)
+    steps = -(-(n_pairs + nb * (pps - 1)) // pps)
+    return steps * pps
+
+
 def _compact_worklist(live: jax.Array, n_pairs: int, *,
-                      kv_major: bool = False):
-    """Compact a live matrix into ((P, 2) pairs, (P, 2) flags).
+                      pairs_per_step: int = 1, kv_major: bool = False):
+    """Compact a live matrix into ((L, 2) pairs, (S, 2) flags, (L,) mask).
 
     Pairs are (qb, kb), destination-major: row-major over ``live[q, k]``
-    (q-major) or over its transpose (k-major, ``kv_major=True``). Entries
-    past the live count replicate the last live pair, so the destination
-    id is nondecreasing over the whole padded list and the final run
-    extends through the tail (the visit-flag protocol in kernel.py).
-    flags[:, 0]/[:, 1] mark the first/last step of each destination run.
+    (q-major) or over its transpose (k-major, ``kv_major=True``). With
+    ``pairs_per_step`` (pps) > 1 the kernels consume the list pps entries
+    per grid step, so each destination run is padded to a pps multiple
+    with *dead* entries that replicate the run's last live pair —
+    identical consecutive block ids cost no new DMA, and the per-entry
+    ``live`` mask gates their compute. L = S·pps is static
+    (:func:`worklist_len`); groups never straddle runs because every run
+    starts on a pps boundary.
+
+    Entries past the last live run replicate the final live pair, so the
+    destination id is nondecreasing over the whole padded list and the
+    final run extends through the tail (the visit-flag protocol in
+    kernel.py). flags[:, 0]/[:, 1] mark the first/last *step* of each
+    destination run (shape (S, 2) — one row per grid step). At pps=1
+    this reduces exactly (bitwise) to the ungrouped list.
     """
     nb = live.shape[0]
+    pps = max(int(pairs_per_step), 1)
+    L = worklist_len(n_pairs, nb, pps)
     flat = (live.T if kv_major else live).reshape(-1)
     order = jnp.argsort(jnp.logical_not(flat), stable=True).astype(jnp.int32)
     n_live = jnp.sum(flat.astype(jnp.int32))
@@ -120,18 +145,38 @@ def _compact_worklist(live: jax.Array, n_pairs: int, *,
     # the overflow degrades to dropped trailing pairs with a well-formed
     # list; build_attn_plan's debug check turns it into a hard error.
     n_live = jnp.minimum(n_live, n_pairs)
-    idx = order[:n_pairs]
-    last = order[jnp.maximum(n_live - 1, 0)]
-    pos = jnp.arange(n_pairs, dtype=jnp.int32)
-    v = jnp.where(pos < n_live, idx, last)
+    pos = jnp.arange(order.shape[0], dtype=jnp.int32)
+    is_live = pos < n_live
+    majors = order // nb
+    # per-destination live counts → run starts padded to pps multiples
+    counts = jnp.zeros((nb,), jnp.int32).at[majors].add(
+        is_live.astype(jnp.int32))
+    padded = -(-counts // pps) * pps
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(padded)[:-1]])
+    live_starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                   jnp.cumsum(counts)[:-1]])
+    # order's live prefix is destination-major, so rank-in-run is just the
+    # position minus the run's first live position
+    rank = pos - live_starts[majors]
+    slot = jnp.where(is_live, starts[majors] + rank, L)
+    entries = jnp.full((L + 1,), -1, jnp.int32).at[slot].set(
+        order, mode="drop")[:L]
+    # dead slots forward-fill the previous live entry (same run by
+    # construction); an all-dead prefix clamps to flat index 0 with the
+    # live mask 0 — the old all-padding protocol (pair (0, 0), no compute)
+    posL = jnp.arange(L, dtype=jnp.int32)
+    fillsrc = jax.lax.cummax(jnp.where(entries >= 0, posL, -1), axis=0)
+    v = jnp.maximum(entries[jnp.maximum(fillsrc, 0)], 0)
     major, minor = v // nb, v % nb
     pairs = (jnp.stack([minor, major], axis=1) if kv_major
              else jnp.stack([major, minor], axis=1))
-    dest = major
+    live_mask = (entries >= 0).astype(jnp.int32)
+    dest = major[::pps]                      # group-constant by construction
     first = jnp.concatenate([jnp.ones((1,), bool), dest[1:] != dest[:-1]])
     lastf = jnp.concatenate([dest[1:] != dest[:-1], jnp.ones((1,), bool)])
     flags = jnp.stack([first, lastf], axis=1).astype(jnp.int32)
-    return pairs, flags, n_live
+    return pairs, flags, live_mask, n_live
 
 
 def num_pairs_bound(nb: int, block: int, num_rows: int,
@@ -161,19 +206,25 @@ class JaggedAttnPlan(NamedTuple):
 
     The work-lists enumerate exactly the live (qb, kb) block pairs:
     ``q_wl`` q-block-major (forward + dq kernels), ``kv_wl`` k-block-major
-    (dk/dv kernel), each with (P, 2) first/last visit flags; ``n_live``
-    (shape (1,)) counts the real entries — the tail replicates the last
-    live pair. Rows longer than the ``max_row_len`` the plan was built
-    with would overflow the static list and silently drop pairs; callers
-    own that contract (the model passes cfg.max_seq_len).
+    (dk/dv kernel). With ``pairs_per_step`` (pps) > 1 each grid step
+    consumes pps consecutive list entries: lists are (L, 2) with
+    L = S·pps, flags (S, 2) mark the first/last *step* of each
+    destination run, and the per-entry ``q_live``/``kv_live`` masks gate
+    dead padding entries (which replicate their run's last live pair so
+    revisited block ids cost no new DMA). ``n_live`` (shape (1,)) counts
+    the real entries. Rows longer than the ``max_row_len`` the plan was
+    built with would overflow the static list and silently drop pairs;
+    callers own that contract (the model passes cfg.max_seq_len).
     """
     meta_i32: jax.Array     # (capacity, 3) int32: seg / pos / ts
     meta_f32: jax.Array     # (capacity, 1) f32: 1/n_row
     seg_rng: jax.Array      # (nb, 2) int32 per-block segment ranges
-    q_wl: jax.Array         # (P, 2) int32 (qb, kb), q-block-major
-    q_flags: jax.Array      # (P, 2) int32 first/last of each qb run
-    kv_wl: jax.Array        # (P, 2) int32 (qb, kb), k-block-major
-    kv_flags: jax.Array     # (P, 2) int32 first/last of each kb run
+    q_wl: jax.Array         # (L, 2) int32 (qb, kb), q-block-major
+    q_flags: jax.Array      # (S, 2) int32 first/last of each qb run
+    q_live: jax.Array       # (L,) int32 1 = real entry, 0 = dead padding
+    kv_wl: jax.Array        # (L, 2) int32 (qb, kb), k-block-major
+    kv_flags: jax.Array     # (S, 2) int32 first/last of each kb run
+    kv_live: jax.Array      # (L,) int32 1 = real entry, 0 = dead padding
     n_live: jax.Array       # (1,) int32 live-pair count
 
     @property
@@ -190,8 +241,18 @@ class JaggedAttnPlan(NamedTuple):
 
     @property
     def num_pairs(self) -> int:
-        """Static work-list length == the 1-D grid length."""
+        """Static padded work-list length L (= grid length × pps)."""
         return self.q_wl.shape[0]
+
+    @property
+    def pairs_per_step(self) -> int:
+        """Work-list entries consumed per grid step (static)."""
+        return self.q_wl.shape[0] // self.q_flags.shape[0]
+
+    @property
+    def num_steps(self) -> int:
+        """1-D grid length S of the work-list kernels."""
+        return self.q_flags.shape[0]
 
 
 def _check_row_bound(offsets, max_row_len: int) -> None:
@@ -220,6 +281,7 @@ def build_attn_plan(offsets: jax.Array, timestamps: jax.Array,
                     causal: bool = True,
                     max_row_len: Optional[int] = None,
                     worklists: bool = True,
+                    pairs_per_step: Optional[int] = None,
                     debug_checks: bool = False) -> JaggedAttnPlan:
     """Build the per-step plan from the jagged structure (traced code).
 
@@ -230,9 +292,11 @@ def build_attn_plan(offsets: jax.Array, timestamps: jax.Array,
     max sequence length. Rows longer than the bound overflow the static
     list: the live count is clamped so the list stays well-formed
     (trailing pairs dropped); ``debug_checks=True`` raises instead.
-    ``worklists=False`` skips the two argsort compactions and emits
-    (1,)-dummy lists — for the dense schedule only, which never reads
-    them.
+    ``pairs_per_step`` groups that many list entries per kernel grid step
+    (bitwise-invariant; defaults to the tuned.json entry for this shape
+    regime via :mod:`repro.kernels.autotune`). ``worklists=False`` skips
+    the two argsort compactions and emits (1,)-dummy lists — for the
+    dense schedule only, which never reads them.
     """
     if debug_checks and max_row_len is not None:
         _check_row_bound(offsets, max_row_len)
@@ -246,18 +310,26 @@ def build_attn_plan(offsets: jax.Array, timestamps: jax.Array,
     seg_rng = _seg_ranges(meta_i32[:, 0], nb, block)
     if not worklists:
         z = jnp.zeros((1, 2), jnp.int32)
+        z1 = jnp.zeros((1,), jnp.int32)
         return JaggedAttnPlan(meta_i32=meta_i32, meta_f32=meta_f32,
-                              seg_rng=seg_rng, q_wl=z, q_flags=z,
-                              kv_wl=z, kv_flags=z,
+                              seg_rng=seg_rng, q_wl=z, q_flags=z, q_live=z1,
+                              kv_wl=z, kv_flags=z, kv_live=z1,
                               n_live=jnp.zeros((1,), jnp.int32))
+    if pairs_per_step is None:
+        pairs_per_step = autotune.resolve(
+            "attn_worklist", {"block": block, "nb": nb, "causal": causal},
+            "pairs_per_step", default=1)
+    pps = max(int(pairs_per_step), 1)
     live = _live_block_matrix(seg_rng, block, causal)
     P = num_pairs_bound(nb, block, offsets.shape[0] - 1, max_row_len, causal)
-    q_wl, q_flags, n_live = _compact_worklist(live, P)
-    kv_wl, kv_flags, _ = _compact_worklist(live, P, kv_major=True)
+    q_wl, q_flags, q_live, n_live = _compact_worklist(
+        live, P, pairs_per_step=pps)
+    kv_wl, kv_flags, kv_live, _ = _compact_worklist(
+        live, P, pairs_per_step=pps, kv_major=True)
     return JaggedAttnPlan(meta_i32=meta_i32, meta_f32=meta_f32,
                           seg_rng=seg_rng, q_wl=q_wl, q_flags=q_flags,
-                          kv_wl=kv_wl, kv_flags=kv_flags,
-                          n_live=n_live.reshape(1))
+                          q_live=q_live, kv_wl=kv_wl, kv_flags=kv_flags,
+                          kv_live=kv_live, n_live=n_live.reshape(1))
 
 
 # --------------------------------------------------------------------------
@@ -272,6 +344,7 @@ def jagged_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      plan: Optional[JaggedAttnPlan] = None,
                      schedule: str = "worklist",
                      max_row_len: Optional[int] = None,
+                     pairs_per_step: Optional[int] = None,
                      interpret: Optional[bool] = None) -> jax.Array:
     """Fused jagged pointwise attention + RAB. q,k,v: (cap, H, D).
 
@@ -325,7 +398,8 @@ def jagged_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     if plan is None:
         plan = build_attn_plan(offsets, timestamps, cap, block=block,
                                causal=causal, max_row_len=max_row_len,
-                               worklists=schedule == "worklist")
+                               worklists=schedule == "worklist",
+                               pairs_per_step=pairs_per_step)
     if plan.capacity != capp or plan.block != block:
         raise ValueError(
             f"plan (capacity={plan.capacity}, block={plan.block}) does not "
@@ -373,7 +447,7 @@ def _attn_core(q, k, v, pt, tt, plan, static):
     else:
         raw = K.fwd_pallas_wl(q, k, v, pt, tt, plan.meta_i32, plan.meta_f32,
                               plan.q_wl[:, 0], plan.q_wl[:, 1],
-                              plan.q_flags, plan.n_live, **kw)
+                              plan.q_flags, plan.q_live, plan.n_live, **kw)
     return _masked(plan.meta_i32, raw)
 
 
@@ -393,7 +467,8 @@ def _attn_core_bwd(static, res, dy):
     else:
         dq, dk, dv, dpt, dtt = K.bwd_pallas_wl(
             q, k, v, dy, pt, tt, plan.meta_i32, plan.meta_f32,
-            plan.q_wl, plan.q_flags, plan.kv_wl, plan.kv_flags,
+            plan.q_wl, plan.q_flags, plan.q_live,
+            plan.kv_wl, plan.kv_flags, plan.kv_live,
             plan.n_live, **kw)
     dq, dk, dv = _masked(plan.meta_i32, dq, dk, dv)
     if not kw["use_pos"]:
@@ -437,12 +512,14 @@ class PlannedAttention:
 
     def __init__(self, *, block: int = 128, schedule: str = "worklist",
                  causal: bool = True, max_row_len: Optional[int] = None,
+                 pairs_per_step: Optional[int] = None,
                  interpret: Optional[bool] = None,
                  debug_checks: bool = False):
         self.block = block
         self.schedule = schedule
         self.causal = causal
         self.max_row_len = max_row_len
+        self.pairs_per_step = pairs_per_step
         self.interpret = interpret
         self.debug_checks = debug_checks
 
@@ -451,6 +528,7 @@ class PlannedAttention:
         return build_attn_plan(offsets, timestamps, capacity,
                                block=self.block, causal=self.causal,
                                max_row_len=self.max_row_len,
+                               pairs_per_step=self.pairs_per_step,
                                debug_checks=self.debug_checks)
 
     def __call__(self, q, k, v, offsets, timestamps, rab_params, rab, *,
@@ -462,12 +540,16 @@ class PlannedAttention:
             q, k, v, offsets, timestamps, rab_params, rab,
             time_mode=time_mode, causal=self.causal,
             block=self.block, plan=plan, schedule=self.schedule,
-            max_row_len=self.max_row_len, interpret=self.interpret)
+            max_row_len=self.max_row_len,
+            pairs_per_step=self.pairs_per_step, interpret=self.interpret)
 
 
 def make_attn_fn(*, block: int = 128, schedule: str = "worklist",
                  max_row_len: Optional[int] = None,
+                 pairs_per_step: Optional[int] = None,
                  interpret: Optional[bool] = None) -> PlannedAttention:
     """attn_fn factory for models.hstu.hstu_block(attn_fn=...)."""
     return PlannedAttention(block=block, schedule=schedule,
-                            max_row_len=max_row_len, interpret=interpret)
+                            max_row_len=max_row_len,
+                            pairs_per_step=pairs_per_step,
+                            interpret=interpret)

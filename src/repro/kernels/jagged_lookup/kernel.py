@@ -1,8 +1,10 @@
 """Pallas TPU kernel: jagged embedding lookup (paper §4.1.2).
 
 Forward — scalar-prefetch gather: the packed *valid* indices are prefetched
-into SMEM and drive the BlockSpec ``index_map`` directly, so each grid step
-DMAs exactly one live embedding row HBM→VMEM. Padding never enters the
+into SMEM and drive the BlockSpec ``index_map`` directly, so each grid
+step DMAs ``rows_per_step`` live embedding rows HBM→VMEM (the table rides
+in once per slot with its own (1, D) window; one batched vector store
+writes the (rows_per_step, D) output block). Padding never enters the
 kernel (the paper's 'operate only on valid indices'); there is no per-row
 zero-check or branch (the paper's KJT complaint) because validity is
 resolved before launch.
@@ -12,6 +14,20 @@ paper's table-major batch regrouping, which also gives the L2-locality
 win), so duplicate rows occupy *consecutive* grid steps; the output block
 for a row therefore stays VMEM-resident across its duplicates and the
 kernel accumulates in place, writing each row exactly once.
+
+Two backward variants exist:
+
+* :func:`runsum_pallas` — run-sums pre-materialized ``(n, D)`` grad rows
+  (the two-pass oracle path: rows are built in HBM first);
+* :func:`weighted_runsum_scatter` — the fused variant: each grad row is
+  *generated inside the kernel* as ``w[slot] · (o[src] · scale)`` (the
+  source row gathered by a scalar-prefetched index), run-summed in VMEM,
+  and flushed straight to its destination row of the dense ``(V, D)``
+  gradient. The per-pair ``(n, D)`` grad-row buffer never exists in HBM —
+  the last big negative-path temporary. Because the output BlockSpec index
+  is the *destination id* (constant across a sorted run), Pallas only
+  flushes the block when the run ends: the final flush carries the run
+  total, and revisited ids cost no extra HBM traffic.
 """
 from __future__ import annotations
 
@@ -22,32 +38,62 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import autotune
+
 
 # --------------------------------------------------------------------------
 # forward gather
 # --------------------------------------------------------------------------
 
-def _gather_kernel(ids_ref, tbl_ref, out_ref, *, rows_per_step):
-    out_ref[...] = tbl_ref[...]
+def _gather_kernel(ids_ref, *refs, rows_per_step):
+    tbl_refs, out_ref = refs[:rows_per_step], refs[rows_per_step]
+    if rows_per_step == 1:
+        out_ref[...] = tbl_refs[0][...]
+    else:
+        # one vectorized (rows_per_step, D) store per grid step
+        out_ref[...] = jnp.concatenate([t[...] for t in tbl_refs], axis=0)
 
 
 def gather_pallas(table: jax.Array, ids: jax.Array, *,
+                  rows_per_step: int = 1,
                   interpret: bool = False) -> jax.Array:
-    """table (V, D), ids (n,) int32 (pre-clipped to [0, V)) → (n, D)."""
+    """table (V, D), ids (n,) int32 (pre-clipped to [0, V)) → (n, D).
+
+    ``rows_per_step`` batches the gather: each grid step issues that many
+    row DMAs (the table is passed once per slot — same HBM buffer, one
+    BlockSpec window each) and lands them with a single block store.
+    Pure data movement, so every setting is bitwise identical.
+    """
     n = ids.shape[0]
     V, D = table.shape
+    rps = max(int(rows_per_step), 1)
+    pad = (-n) % rps
+    if pad:  # padded slots re-gather row 0; sliced off below
+        ids = jnp.concatenate([ids, jnp.zeros((pad,), ids.dtype)])
+    np_ = n + pad
+    grid = np_ // rps
+
+    def _at_slot(u):
+        return pl.BlockSpec(
+            (1, D), lambda i, ids_ref, u=u: (ids_ref[i * rps + u], 0))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(n,),
-        in_specs=[pl.BlockSpec((1, D), lambda i, ids_ref: (ids_ref[i], 0))],
-        out_specs=pl.BlockSpec((1, D), lambda i, ids_ref: (i, 0)),
+        grid=(grid,),
+        in_specs=[_at_slot(u) for u in range(rps)],
+        out_specs=pl.BlockSpec((rps, D), lambda i, ids_ref: (i, 0)),
     )
-    return pl.pallas_call(
-        functools.partial(_gather_kernel, rows_per_step=1),
+    cost = autotune.estimate_cost(
+        "lookup_gather", {"n": np_, "D": D, "itemsize": table.dtype.itemsize},
+        {"rows_per_step": rps})
+    out = pl.pallas_call(
+        functools.partial(_gather_kernel, rows_per_step=rps),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n, D), table.dtype),
+        out_shape=jax.ShapeDtypeStruct((np_, D), table.dtype),
         interpret=interpret,
-    )(ids, table)
+        **autotune.pallas_cost(bytes_accessed=cost["bytes_accessed"]),
+    )(ids, *([table] * rps))
+    return out[:n] if pad else out
 
 
 # --------------------------------------------------------------------------
@@ -94,4 +140,70 @@ def runsum_pallas(grad_rows: jax.Array, sorted_ids: jax.Array, *,
         _runsum_kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, D), jnp.float32),
         interpret=interpret,
+        **autotune.pallas_cost(flops=n * D, bytes_accessed=8 * n * D),
     )(sorted_ids, grad_rows)
+
+
+# --------------------------------------------------------------------------
+# fused weighted run-sum scatter — grad rows generated in sorted-run order
+# --------------------------------------------------------------------------
+
+def _wscatter_kernel(sids_ref, src_ref, w_ref, o_ref, out_ref, acc_ref, *,
+                     scale):
+    """Generate grad row ``w · (o[src] · scale)`` and run-sum it in place.
+
+    ``sids`` (sorted destination ids) and ``src`` (source token per sorted
+    slot) are scalar-prefetched: ``src`` drives the o-row gather, ``sids``
+    both the run detection and the *output* index map — so each run's
+    total is flushed directly to its destination row and nothing touches
+    HBM per-slot.
+    """
+    i = pl.program_id(0)
+    first = (i == 0) | (sids_ref[i] != sids_ref[jnp.maximum(i - 1, 0)])
+    # identical op order to the two-pass path: w · (o · scale)
+    row = w_ref[0, 0] * (o_ref[...].astype(jnp.float32) * scale)
+
+    @pl.when(first)
+    def _set():
+        acc_ref[...] = row
+
+    @pl.when(jnp.logical_not(first))
+    def _add():
+        acc_ref[...] += row
+
+    out_ref[...] = acc_ref[...]
+
+
+def weighted_runsum_scatter(o: jax.Array, weights: jax.Array,
+                            sorted_ids: jax.Array, src: jax.Array,
+                            vocab: int, *, scale: float = 1.0,
+                            interpret: bool = False) -> jax.Array:
+    """Σ over sorted slots of ``weights[i] · o[src[i]] · scale`` per id.
+
+    o (T, D); weights (n,) fp32 (zeroed for dropped slots); sorted_ids
+    (n,) int32 ascending with dropped slots keyed ≥ vocab; src (n,) int32
+    source row per slot. Returns (vocab + 1, D) fp32 where row ``vocab``
+    is the drop sink and rows never visited hold *unspecified* memory —
+    the ops wrapper masks them with its touched-row set.
+    """
+    n = sorted_ids.shape[0]
+    T, D = o.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, sids, src: (i, 0)),
+            pl.BlockSpec((1, D), lambda i, sids, src: (src[i], 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, D),
+            lambda i, sids, src: (jnp.minimum(sids[i], vocab), 0)),
+        scratch_shapes=[pltpu.VMEM((1, D), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_wscatter_kernel, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((vocab + 1, D), jnp.float32),
+        interpret=interpret,
+        **autotune.pallas_cost(flops=3 * n * D, bytes_accessed=12 * n * D),
+    )(sorted_ids, src, weights[:, None], o)

@@ -17,6 +17,7 @@ from typing import Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels.jagged_lookup import kernel as K
 
 
@@ -83,18 +84,97 @@ def scatter_add_rows(grad_rows: jax.Array, ids: jax.Array, vocab: int, *,
     return out
 
 
+def scatter_add_weighted_rows(weights: jax.Array, o: jax.Array,
+                              ids: jax.Array, vocab: int, *,
+                              scale: float = 1.0,
+                              impl: Optional[str] = None,
+                              chunk: int = 128,
+                              interpret: Optional[bool] = None) -> jax.Array:
+    """Σ over (t, r) of ``weights[t, r] · o[t] · scale`` per id → (V, D).
+
+    The factored form of a sparse embedding gradient: ``weights`` (T, R)
+    per-(token, slot) scalars, ``o`` (T, D) source rows, ``ids`` (T·R,)
+    destinations flattened t-major; ids outside [0, vocab) are dropped.
+
+    ``impl="fused"`` (default) generates each grad row *inside* the
+    sorted-runsum scatter — the (T·R, D) row buffer never materializes in
+    HBM (kernel on TPU; a token-chunked scan twin elsewhere whose live
+    temporary is (chunk·R, D)). ``impl="two_pass"`` is the oracle: build
+    all rows, then :func:`scatter_add_rows`.
+    """
+    interpret_ = default_interpret() if interpret is None else interpret
+    T, R = weights.shape
+    D = o.shape[1]
+    if impl is None:
+        impl = autotune.resolve("neg_fused", {"segment": T, "R": R, "D": D},
+                                "scatter_impl", default="fused")
+    if impl == "two_pass":
+        rows = (weights.astype(jnp.float32)[:, :, None]
+                * (o.astype(jnp.float32) * scale)[:, None, :]
+                ).reshape(T * R, D)
+        return scatter_add_rows(rows, ids, vocab, interpret=interpret_)
+    if impl != "fused":
+        raise ValueError(f"unknown scatter impl {impl!r}")
+    valid = (ids >= 0) & (ids < vocab)
+    if interpret_:
+        # XLA twin: chunk the token axis so the live row buffer is
+        # (chunk·R, D), never (T·R, D) — same reduction, scan-ordered.
+        o32 = o.astype(jnp.float32) * scale
+        w32 = weights.astype(jnp.float32)
+        pad = (-T) % chunk
+        if pad:
+            o32 = jnp.concatenate([o32, jnp.zeros((pad, D), jnp.float32)])
+            w32 = jnp.concatenate([w32, jnp.zeros((pad, R), jnp.float32)])
+        idp = jnp.concatenate(
+            [jnp.where(valid, ids, vocab).astype(jnp.int32),
+             jnp.full((pad * R,), vocab, jnp.int32)])
+        nc = (T + pad) // chunk
+
+        def body(acc, args):
+            wb, ob, idb = args
+            rows = (wb[:, :, None] * ob[:, None, :]).reshape(chunk * R, D)
+            return acc.at[idb].add(rows, mode="drop"), None
+
+        acc, _ = jax.lax.scan(
+            body, jnp.zeros((vocab, D), jnp.float32),
+            (w32.reshape(nc, chunk, R), o32.reshape(nc, chunk, D),
+             idp.reshape(nc, chunk * R)))
+        return acc
+    # TPU: sort (id, slot) pairs table-major and generate rows in-kernel
+    skey = jnp.where(valid, ids, _DROP_KEY).astype(jnp.int32)
+    order = jnp.argsort(skey)
+    sids = skey[order]
+    src = (order // R).astype(jnp.int32)
+    ws = (weights.reshape(-1)[order].astype(jnp.float32)
+          * valid[order].astype(jnp.float32))
+    out = K.weighted_runsum_scatter(o.astype(jnp.float32), ws, sids, src,
+                                    vocab, scale=scale, interpret=False)
+    # unvisited destination rows hold unspecified memory — mask by the
+    # touched-row set instead of pre-zeroing the whole (V, D) buffer
+    touched = jnp.zeros((vocab,), bool).at[
+        jnp.where(valid, ids, vocab)].set(True, mode="drop")
+    return jnp.where(touched[:, None], out[:vocab], 0.0)
+
+
 def jagged_lookup(table: jax.Array, ids: jax.Array, *,
                   compute_dtype=jnp.bfloat16,
+                  rows_per_step: Optional[int] = None,
                   interpret: Optional[bool] = None) -> jax.Array:
     """Differentiable packed-index gather. ids (n,) int32, ids < 0 → zeros."""
     interpret_ = default_interpret() if interpret is None else interpret
     V, D = table.shape
+    if rows_per_step is None:
+        rows_per_step = autotune.resolve(
+            "lookup_gather",
+            {"n": ids.shape[0], "D": D, "itemsize": table.dtype.itemsize},
+            "rows_per_step", default=1)
 
     @jax.custom_vjp
     def _lookup(table):
         valid = ids >= 0
         safe = jnp.clip(ids, 0, V - 1)
-        rows = K.gather_pallas(table, safe, interpret=interpret_)
+        rows = K.gather_pallas(table, safe, rows_per_step=rows_per_step,
+                               interpret=interpret_)
         return (rows * valid[:, None].astype(table.dtype)).astype(compute_dtype)
 
     def fwd(table):

@@ -4,8 +4,8 @@ One pass fuses the four stages the paper keeps separate (§4.3.1-§4.3.3):
 
   gather    — scalar-prefetched negative ids drive the table BlockSpec
               ``index_map`` (the ``jagged_lookup`` technique), so each grid
-              step DMAs exactly one *live* embedding row HBM→VMEM; the
-              (T, R, D) negative tensor never exists anywhere.
+              step DMAs ``rows_per_step`` *live* embedding rows HBM→VMEM;
+              the (T, R, D) negative tensor never exists anywhere.
   dequant   — rows stored (or emulated-fetched) fp16/bf16 are widened to
               fp32 in VMEM right before the dot (§4.3.2).
   sharing   — intra-batch logit sharing (§4.3.3) is a deterministic
@@ -16,21 +16,29 @@ One pass fuses the four stages the paper keeps separate (§4.3.1-§4.3.3):
               [pos | own negatives | shared negatives] is produced directly;
               HBM output is just (T,) plus the tiny per-segment blocks.
 
-Grid layout: ``(n_seg, segment·R)`` — the outer dim walks fixed-size
-segments of packed valid positions, the inner dim walks that segment's
-(token, slot) pairs one gathered row at a time. Output blocks are indexed
-by the outer dim only, so they stay VMEM-resident across the inner sweep
-and are flushed once per segment (the standard inner-accumulation pattern).
+Grid layout: ``(n_seg, segment·R / rows_per_step)`` — the outer dim walks
+fixed-size segments of packed valid positions, the inner dim walks that
+segment's (token, slot) pairs ``rows_per_step`` gathered rows at a time
+(the autotunable knob; the table rides in once per slot with its own
+(1, D) window). Per-step logits land with one *block* store — (1, rps)
+within a token when rps ≤ R, (rps/R, R) across whole tokens when rps is a
+token multiple — replacing the (1, 1) scalar-store walk. Per-slot
+arithmetic keeps the exact rps=1 op order (each slot's dot is its own
+reduction), so every legal rows_per_step is bitwise-identical. Output
+blocks are indexed by the outer dim only, so they stay VMEM-resident
+across the inner sweep and are flushed once per segment (the standard
+inner-accumulation pattern).
 
 Backward is the same sweep twice inside one kernel (grid
-``(n_seg, 2·segment·R)``): phase 0 re-gathers and rebuilds the segment
-logits, the phase boundary turns them into softmax weights (folding the
-shared-logit contributions back onto their source rows with the transposed
-permutation), phase 1 re-gathers to accumulate d_out. The table gradient
-leaves the kernel as per-(token, slot) *weights* only — the ops wrapper
-expands them to sparse (id, grad_row) pairs and reduces through the
-existing sorted run-sum scatter kernel, never a dense (V, D) scatter-add
-of (T, R, D) rows.
+``(n_seg, 2·segment·R / rows_per_step)``): phase 0 re-gathers and rebuilds
+the segment logits, the phase boundary turns them into softmax weights
+(folding the shared-logit contributions back onto their source rows with
+the transposed permutation), phase 1 re-gathers to accumulate d_out — one
+vectorized weight-block load per step, slot accumulation kept sequential
+for bitwise-stable grads. The table gradient leaves the kernel as
+per-(token, slot) *weights* only — the ops wrapper reduces them through
+the fused weighted runsum-scatter (grad rows generated in sorted-run
+order inside that kernel), never a dense (T·R, D) row buffer.
 """
 from __future__ import annotations
 
@@ -40,6 +48,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import autotune
 
 # Sentinel for masked (invalid-token) pool logits: large-negative instead of
 # -inf so logsumexp arithmetic stays NaN-free even if a whole row masks out.
@@ -72,21 +82,67 @@ def _share_terms(logits, valid_col, perm_ref, expansion, segment):
                                  preferred_element_type=jnp.float32)
 
 
+def check_rows_per_step(rows_per_step: int, segment: int, R: int) -> int:
+    """Legal rows_per_step: divides segment·R and aligns to token rows
+    (divides R, or is a whole multiple of R). Returns it validated."""
+    rps = int(rows_per_step)
+    seg_r = segment * R
+    if not (1 <= rps <= seg_r and seg_r % rps == 0
+            and (R % rps == 0 or rps % R == 0)):
+        raise ValueError(
+            f"rows_per_step={rps} invalid for segment={segment}, R={R}")
+    return rps
+
+
+def _slot_logits(o_ref, tbl_refs, jj, *, R, rps, inv_tau, fetch_dtype):
+    """Per-slot logits for inner step jj → (token_start, count, (…, R-span)
+    block). Each slot's dot is its own (1, D) reduction — the exact rps=1
+    op order — assembled into one block for a single vectorized store."""
+    if rps <= R:                        # rps slots inside one token row
+        t = (jj * rps) // R
+        r0 = (jj * rps) % R
+        o_t = pl.load(o_ref, (pl.ds(t, 1), slice(None))).astype(jnp.float32)
+        logits = [jnp.sum(o_t * _dequant(tbl_refs[u], fetch_dtype)) * inv_tau
+                  for u in range(rps)]
+        blk = jnp.concatenate([l[None, None] for l in logits], axis=1)
+        return t, r0, 1, rps, blk                           # (1, rps)
+    m = rps // R                        # whole tokens per step
+    t0 = jj * m
+    o_blk = pl.load(o_ref, (pl.ds(t0, m), slice(None))).astype(jnp.float32)
+    logits = [jnp.sum(o_blk[u // R:u // R + 1]
+                      * _dequant(tbl_refs[u], fetch_dtype)) * inv_tau
+              for u in range(rps)]
+    blk = jnp.concatenate([l[None, None] for l in logits],
+                          axis=1).reshape(m, R)
+    return t0, 0, m, R, blk                                 # (m, R)
+
+
+def _store_logits(acc_ref, o_ref, tbl_refs, jj, *, R, rps, inv_tau,
+                  fetch_dtype):
+    t, r0, nrow, ncol, blk = _slot_logits(
+        o_ref, tbl_refs, jj, R=R, rps=rps, inv_tau=inv_tau,
+        fetch_dtype=fetch_dtype)
+    pl.store(acc_ref, (pl.ds(t, nrow), pl.ds(r0, ncol)), blk)
+
+
 # --------------------------------------------------------------------------
 # forward: gather + dequant + share + logsumexp
 # --------------------------------------------------------------------------
 
-def _fwd_kernel(ids_ref, o_ref, tbl_ref, pos_ref, valid_ref, perm_ref,
-                lse_ref, acc_ref, *, segment, R, expansion, inv_tau,
+def _fwd_kernel(ids_ref, *refs, segment, R, rps, expansion, inv_tau,
                 fetch_dtype):
+    o_ref = refs[0]
+    tbl_refs = refs[1:1 + rps]
+    pos_ref, valid_ref, perm_ref = refs[1 + rps:4 + rps]
+    lse_ref = refs[4 + rps]
+    acc_ref = refs[5 + rps]
     j = pl.program_id(1)
-    t, r = j // R, j % R
-    row = _dequant(tbl_ref, fetch_dtype)                    # (1, D)
-    o_t = pl.load(o_ref, (pl.ds(t, 1), slice(None))).astype(jnp.float32)
-    logit = jnp.sum(o_t * row) * inv_tau
-    pl.store(acc_ref, (pl.ds(t, 1), pl.ds(r, 1)), logit[None, None])
+    G = segment * R // rps
 
-    @pl.when(j == segment * R - 1)
+    _store_logits(acc_ref, o_ref, tbl_refs, j, R=R, rps=rps,
+                  inv_tau=inv_tau, fetch_dtype=fetch_dtype)
+
+    @pl.when(j == G - 1)
     def _finalize():
         logits = acc_ref[...]                               # (seg, R)
         pos = pos_ref[0, :].astype(jnp.float32)             # (seg,)
@@ -103,18 +159,26 @@ def _fwd_kernel(ids_ref, o_ref, tbl_ref, pos_ref, valid_ref, perm_ref,
 def fwd_pallas(out_emb: jax.Array, pos_logit2d: jax.Array, table: jax.Array,
                ids_flat: jax.Array, valid2d: jax.Array, perms: jax.Array, *,
                segment: int, R: int, expansion: int, tau: float,
-               fetch_dtype=None, interpret: bool = False) -> jax.Array:
+               fetch_dtype=None, rows_per_step: int = 1,
+               interpret: bool = False) -> jax.Array:
     """out_emb (Tp, D) · ids_flat (Tp·R,) → per-token lse (n_seg, segment)."""
     Tp, D = out_emb.shape
     n_seg = Tp // segment
     seg_r = segment * R
+    rps = check_rows_per_step(rows_per_step, segment, R)
+    G = seg_r // rps
+
+    def _tbl_spec(u):
+        return pl.BlockSpec(
+            (1, table.shape[1]),
+            lambda si, j, ids, u=u: (ids[si * seg_r + j * rps + u], 0))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(n_seg, seg_r),
+        grid=(n_seg, G),
         in_specs=[
             pl.BlockSpec((segment, D), lambda si, j, ids: (si, 0)),
-            pl.BlockSpec((1, table.shape[1]),
-                         lambda si, j, ids: (ids[si * seg_r + j], 0)),
+            *[_tbl_spec(u) for u in range(rps)],
             pl.BlockSpec((1, segment), lambda si, j, ids: (si, 0)),
             pl.BlockSpec((1, segment), lambda si, j, ids: (si, 0)),
             pl.BlockSpec((1, perms.shape[1], segment),
@@ -123,40 +187,49 @@ def fwd_pallas(out_emb: jax.Array, pos_logit2d: jax.Array, table: jax.Array,
         out_specs=pl.BlockSpec((1, segment), lambda si, j, ids: (si, 0)),
         scratch_shapes=[pltpu.VMEM((segment, R), jnp.float32)],
     )
+    cost = autotune.estimate_cost(
+        "neg_fused",
+        {"segment": segment, "R": R, "D": D, "T": Tp, "expansion": expansion},
+        {"rows_per_step": rps})
     return pl.pallas_call(
-        functools.partial(_fwd_kernel, segment=segment, R=R,
+        functools.partial(_fwd_kernel, segment=segment, R=R, rps=rps,
                           expansion=expansion, inv_tau=1.0 / tau,
                           fetch_dtype=fetch_dtype),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_seg, segment), jnp.float32),
         interpret=interpret,
-    )(ids_flat, out_emb, table, pos_logit2d, valid2d, perms)
+        **autotune.pallas_cost(**{k: cost[k] for k in
+                                  ("flops", "bytes_accessed",
+                                   "transcendentals")}),
+    )(ids_flat, out_emb, *([table] * rps), pos_logit2d, valid2d, perms)
 
 
 # --------------------------------------------------------------------------
 # backward: two-phase sweep in one kernel
-#   phase 0 (j < seg·R)   re-gather → rebuild segment logits
-#   boundary (j == seg·R) logits → softmax weights w (sharing transposed
-#                         back onto source rows), d_pos
-#   phase 1 (j ≥ seg·R)   re-gather → accumulate d_out from w
+#   phase 0 (j < G)    re-gather → rebuild segment logits (block stores)
+#   boundary (j == G)  logits → softmax weights w (sharing transposed
+#                      back onto source rows), d_pos
+#   phase 1 (j ≥ G)    re-gather → accumulate d_out from w (one block
+#                      weight load per step, sequential slot accumulation)
 # --------------------------------------------------------------------------
 
-def _bwd_kernel(ids_ref, o_ref, tbl_ref, pos_ref, valid_ref, lse_ref, g_ref,
-                perm_ref, w_ref, dout_ref, dpos_ref, acc_ref, w_acc, do_acc,
-                *, segment, R, expansion, inv_tau, fetch_dtype):
+def _bwd_kernel(ids_ref, *refs, segment, R, rps, expansion, inv_tau,
+                fetch_dtype):
+    o_ref = refs[0]
+    tbl_refs = refs[1:1 + rps]
+    pos_ref, valid_ref, lse_ref, g_ref, perm_ref = refs[1 + rps:6 + rps]
+    w_ref, dout_ref, dpos_ref = refs[6 + rps:9 + rps]
+    acc_ref, w_acc, do_acc = refs[9 + rps:12 + rps]
     j = pl.program_id(1)
-    seg_r = segment * R
-    jj = j % seg_r
-    t, r = jj // R, jj % R
-    row = _dequant(tbl_ref, fetch_dtype)                    # (1, D)
+    G = segment * R // rps
+    jj = j % G
 
-    @pl.when(j < seg_r)
+    @pl.when(j < G)
     def _rebuild():
-        o_t = pl.load(o_ref, (pl.ds(t, 1), slice(None))).astype(jnp.float32)
-        logit = jnp.sum(o_t * row) * inv_tau
-        pl.store(acc_ref, (pl.ds(t, 1), pl.ds(r, 1)), logit[None, None])
+        _store_logits(acc_ref, o_ref, tbl_refs, jj, R=R, rps=rps,
+                      inv_tau=inv_tau, fetch_dtype=fetch_dtype)
 
-    @pl.when(j == seg_r)
+    @pl.when(j == G)
     def _weights():
         logits = acc_ref[...]                               # (seg, R)
         pos = pos_ref[0, :].astype(jnp.float32)
@@ -176,14 +249,28 @@ def _bwd_kernel(ids_ref, o_ref, tbl_ref, pos_ref, valid_ref, lse_ref, g_ref,
         do_acc[...] = jnp.zeros_like(do_acc)
         dpos_ref[0, :] = g * jnp.exp(pos - lse)
 
-    @pl.when(j >= seg_r)
+    @pl.when(j >= G)
     def _accum_dout():
-        wv = pl.load(w_acc, (pl.ds(t, 1), pl.ds(r, 1)))     # (1, 1)
-        cur = pl.load(do_acc, (pl.ds(t, 1), slice(None)))
-        pl.store(do_acc, (pl.ds(t, 1), slice(None)),
-                 cur + wv * row * inv_tau)
+        rows = [_dequant(t, fetch_dtype) for t in tbl_refs]
+        if rps <= R:
+            t = (jj * rps) // R
+            r0 = (jj * rps) % R
+            wv = pl.load(w_acc, (pl.ds(t, 1), pl.ds(r0, rps)))  # (1, rps)
+            cur = pl.load(do_acc, (pl.ds(t, 1), slice(None)))
+            for u in range(rps):
+                cur = cur + wv[0, u] * rows[u] * inv_tau
+            pl.store(do_acc, (pl.ds(t, 1), slice(None)), cur)
+        else:
+            m = rps // R
+            t0 = jj * m
+            wv = pl.load(w_acc, (pl.ds(t0, m), slice(None)))    # (m, R)
+            for g_ in range(m):
+                cur = pl.load(do_acc, (pl.ds(t0 + g_, 1), slice(None)))
+                for s in range(R):
+                    cur = cur + wv[g_, s] * rows[g_ * R + s] * inv_tau
+                pl.store(do_acc, (pl.ds(t0 + g_, 1), slice(None)), cur)
 
-    @pl.when(j == 2 * seg_r - 1)
+    @pl.when(j == 2 * G - 1)
     def _flush():
         w_ref[0, :, :] = w_acc[...]
         dout_ref[...] = do_acc[...].astype(dout_ref.dtype)
@@ -193,26 +280,36 @@ def bwd_pallas(out_emb: jax.Array, pos_logit2d: jax.Array, table: jax.Array,
                ids_flat: jax.Array, valid2d: jax.Array, perms: jax.Array,
                lse2d: jax.Array, g2d: jax.Array, *, segment: int, R: int,
                expansion: int, tau: float, fetch_dtype=None,
-               interpret: bool = False):
+               rows_per_step: int = 1, interpret: bool = False):
     """→ (w (n_seg, seg, R) softmax weights·g, d_out (Tp, D) fp32,
          d_pos (n_seg, seg) fp32). Table grads are finished by the caller
-    via the sorted run-sum scatter (sparse (id, w·o) pairs)."""
+    via the fused weighted runsum-scatter (sparse (id, w·o) pairs)."""
     Tp, D = out_emb.shape
     n_seg = Tp // segment
     seg_r = segment * R
+    rps = check_rows_per_step(rows_per_step, segment, R)
+    G = seg_r // rps
     seg_spec = pl.BlockSpec((1, segment), lambda si, j, ids: (si, 0))
+
+    def _tbl_spec(u):
+        return pl.BlockSpec(
+            (1, table.shape[1]),
+            lambda si, j, ids, u=u: (ids[si * seg_r + (j % G) * rps + u], 0))
+
+    cost = autotune.estimate_cost(
+        "neg_fused",
+        {"segment": segment, "R": R, "D": D, "T": Tp, "expansion": expansion},
+        {"rows_per_step": rps})
     w, dout, dpos = pl.pallas_call(
-        functools.partial(_bwd_kernel, segment=segment, R=R,
+        functools.partial(_bwd_kernel, segment=segment, R=R, rps=rps,
                           expansion=expansion, inv_tau=1.0 / tau,
                           fetch_dtype=fetch_dtype),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=(n_seg, 2 * seg_r),
+            grid=(n_seg, 2 * G),
             in_specs=[
                 pl.BlockSpec((segment, D), lambda si, j, ids: (si, 0)),
-                pl.BlockSpec((1, table.shape[1]),
-                             lambda si, j, ids:
-                             (ids[si * seg_r + j % seg_r], 0)),
+                *[_tbl_spec(u) for u in range(rps)],
                 seg_spec, seg_spec, seg_spec, seg_spec,
                 pl.BlockSpec((1, perms.shape[1], segment),
                              lambda si, j, ids: (si, 0, 0)),
@@ -230,5 +327,9 @@ def bwd_pallas(out_emb: jax.Array, pos_logit2d: jax.Array, table: jax.Array,
                    jax.ShapeDtypeStruct((Tp, D), jnp.float32),
                    jax.ShapeDtypeStruct((n_seg, segment), jnp.float32)],
         interpret=interpret,
-    )(ids_flat, out_emb, table, pos_logit2d, valid2d, lse2d, g2d, perms)
+        **autotune.pallas_cost(
+            flops=2 * cost["flops"], bytes_accessed=2 * cost["bytes_accessed"],
+            transcendentals=2 * cost["transcendentals"]),
+    )(ids_flat, out_emb, *([table] * rps), pos_logit2d, valid2d, lse2d, g2d,
+      perms)
     return w, dout, dpos

@@ -14,7 +14,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.jagged_lookup.ops import scatter_add_rows
+from repro.kernels import autotune
+from repro.kernels.jagged_lookup.ops import scatter_add_weighted_rows
 from repro.kernels.neg_logits import fused as F
 from repro.kernels.neg_logits import kernel as K
 
@@ -122,6 +123,8 @@ def fused_recall_lse(out_emb: jax.Array, pos_logit: jax.Array,
                      expansion: int = 1, key: Optional[jax.Array] = None,
                      valid: Optional[jax.Array] = None, fetch_dtype=None,
                      gather_table: Optional[jax.Array] = None,
+                     rows_per_step: Optional[int] = None,
+                     scatter_impl: Optional[str] = None,
                      interpret: Optional[bool] = None) -> jax.Array:
     """Per-token logsumexp over [pos | R negatives | (k−1)·R shared] (Eq. 2).
 
@@ -141,11 +144,24 @@ def fused_recall_lse(out_emb: jax.Array, pos_logit: jax.Array,
     equal the fp32-round emulation exactly. Without it, ``fetch_dtype``
     emulates the rounding on fp32 master rows (numerics-faithful, not
     bandwidth-faithful).
+
+    ``rows_per_step`` (gathered rows per grid step — bitwise-invariant)
+    and ``scatter_impl`` (``"fused"`` in-kernel grad-row generation vs the
+    ``"two_pass"`` materialized oracle) default to the tuned.json entry
+    for this shape regime via :mod:`repro.kernels.autotune`.
     """
     interpret_ = default_interpret() if interpret is None else interpret
     T, R = neg_ids.shape
     V, D = table.shape
     inv_tau = 1.0 / tau
+    tune_dims = {"segment": segment, "R": R, "D": D, "T": T,
+                 "expansion": expansion}
+    if rows_per_step is None:
+        rows_per_step = autotune.resolve("neg_fused", tune_dims,
+                                         "rows_per_step", default=1)
+    if scatter_impl is None:
+        scatter_impl = autotune.resolve("neg_fused", tune_dims,
+                                        "scatter_impl", default="fused")
     # shadow rows are already half-width: no in-VMEM rounding on top
     fdt = fetch_dtype if gather_table is None else None
 
@@ -169,6 +185,7 @@ def fused_recall_lse(out_emb: jax.Array, pos_logit: jax.Array,
         return F.fwd_pallas(o, pos2d, _gather_src(tbl), ids_flat, valid2,
                             perms, segment=segment, R=R,
                             expansion=expansion, tau=tau, fetch_dtype=fdt,
+                            rows_per_step=rows_per_step,
                             interpret=interpret_)
 
     def fwd(o, pos2d, tbl):
@@ -181,14 +198,14 @@ def fused_recall_lse(out_emb: jax.Array, pos_logit: jax.Array,
             o, pos2d, _gather_src(tbl), ids_flat, valid2, perms, lse,
             g.astype(jnp.float32), segment=segment, R=R,
             expansion=expansion, tau=tau, fetch_dtype=fdt,
-            interpret=interpret_)
-        # sparse (id, grad_row) pairs → sorted run-sum reduction; rows are
-        # per-(token, slot) so duplicates across the batch sum correctly.
-        rows = (w.reshape(Tp, R)[:, :, None]
-                * (o.astype(jnp.float32) * inv_tau)[:, None, :]
-                ).reshape(Tp * R, D)
-        dtbl = scatter_add_rows(rows, ids_flat, V,
-                                interpret=interpret_).astype(tbl.dtype)
+            rows_per_step=rows_per_step, interpret=interpret_)
+        # sparse per-(token, slot) weights → weighted runsum-scatter; the
+        # "fused" impl generates each w·o·τ⁻¹ grad row in sorted-run order
+        # inside the kernel, so the (T·R, D) row buffer never exists.
+        dtbl = scatter_add_weighted_rows(
+            w.reshape(Tp, R), o.astype(jnp.float32), ids_flat, V,
+            scale=inv_tau, impl=scatter_impl,
+            interpret=interpret_).astype(tbl.dtype)
         return dout.astype(o.dtype), dpos, dtbl
 
     _lse.defvjp(fwd, bwd)

@@ -49,8 +49,11 @@ def default_attn_fn(cfg: ArchConfig) -> Optional[Callable]:
     if cfg.gr_block == "sasrec":
         return None
     if jax.default_backend() == "tpu":
+        # pairs_per_step=None: the plan builder reads the tuned.json entry
+        # for this (block, nb) regime via kernels.autotune (default 1)
         return attn_ops.PlannedAttention(block=128,
-                                         max_row_len=cfg.max_seq_len)
+                                         max_row_len=cfg.max_seq_len,
+                                         pairs_per_step=None)
     return None
 
 

@@ -135,7 +135,9 @@ class GRBundle:
              lookup_fn: Optional[Callable] = None,
              neg_mode: str = "fused", expansion: int = 1,
              neg_segment: int = 128, fetch_dtype=jnp.float16,
-             neg_impl: Optional[str] = None, attn_fn=None,
+             neg_impl: Optional[str] = None,
+             neg_rows_per_step: Optional[int] = None,
+             neg_scatter_impl: Optional[str] = None, attn_fn=None,
              input_table: Optional[jax.Array] = None,
              x_emb: Optional[jax.Array] = None,
              shadow: Optional[jax.Array] = None,
@@ -147,7 +149,10 @@ class GRBundle:
         neg_mode: "fused" (default) runs the ID-driven megakernel path —
                   gather + dequant + §4.3.3 sharing + Eq.-2 logsumexp in
                   one pass, no (T, R, d) or (T, R·k) HBM buffers
-                  (``neg_impl`` picks pallas/xla, None = backend dispatch);
+                  (``neg_impl`` picks pallas/xla, None = backend dispatch;
+                  ``neg_rows_per_step``/``neg_scatter_impl`` forward the
+                  kernel's tuning knobs — None reads tuned.json via
+                  kernels.autotune);
                   "baseline" materializes (G, cap, R, d) (§4.3 challenge,
                   the Table 7 reference);
                   "segmented" scans fixed-size segments with quantized
@@ -202,7 +207,9 @@ class GRBundle:
                 key=jax.random.PRNGKey(batch["rng"][0]), tau=tau,
                 valid=valid.reshape(-1), segment=neg_segment,
                 expansion=expansion, fetch_dtype=fetch_dtype,
-                shadow=shadow, impl=neg_impl)
+                shadow=shadow, impl=neg_impl,
+                rows_per_step=neg_rows_per_step,
+                scatter_impl=neg_scatter_impl)
         if neg_mode == "baseline":
             neg_emb = jnp.take(table, batch["neg_ids"], axis=0)  # (G,cap,R,d)
             logits = jax.vmap(partial(NS.neg_logits_baseline, tau=tau))(
